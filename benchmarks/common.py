@@ -1,0 +1,35 @@
+"""Benchmark plumbing: wall-clock timing of engine calls + CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jitted call on this host."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+class Rows:
+    """Collects CSV rows: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, str, str]] = []
+
+    def add(self, name: str, us_per_call=None, derived=None):
+        us = "" if us_per_call is None else f"{us_per_call:.2f}"
+        dv = "" if derived is None else str(derived)
+        self.rows.append((name, us, dv))
+
+    def emit(self):
+        for name, us, dv in self.rows:
+            print(f"{name},{us},{dv}")

@@ -1,0 +1,237 @@
+"""One benchmark per paper figure/table (Figs 7-11, 14; Table 2).
+
+Hardware numbers come from the calibrated cycle/energy model
+(repro.core.perfmodel — see its provenance comments); wall-clock ``us_per_call``
+columns are real engine executions on this host (CPU), included so every row
+has a measured component. Rows print ``name,us_per_call,derived`` where
+``derived`` is ``ours|paper`` when the paper states the value.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, time_call
+from repro.configs import paper_tinyml as pt
+from repro.core import perfmodel as pm
+from repro.core import redmule, semiring
+from repro.core.precision import (
+    REDMULE_FP16,
+    REDMULE_HFP8,
+    REDMULE_HFP8_OUT8,
+    get_policy,
+)
+from repro.kernels import ops
+
+
+def _engine_matmul_us(m, n, k, policy=REDMULE_FP16):
+    x = jnp.ones((m, n), jnp.float32)
+    w = jnp.ones((n, k), jnp.float32)
+    f = jax.jit(functools.partial(redmule.mp_matmul, policy=policy))
+    return time_call(f, x, w)
+
+
+def fig7a_gemm_speedups(rows: Rows):
+    """Fig 7a: RedMulE vs 8-core SW, synthetic GEMMs."""
+    cases = [
+        (8, 8, 8, 3.5), (64, 64, 64, None), (96, 96, 96, None),
+        (128, 128, 128, None), (256, 256, 256, None), (512, 512, 512, 15.0),
+    ]
+    for m, n, k, paper in cases:
+        c = pm.redmule_cycles(m, n, k)
+        speedup = pm.sw_cycles(m, n, k) / c.cycles
+        us = _engine_matmul_us(m, n, k) if m <= 256 else None
+        rows.add(
+            f"fig7a/gemm_{m}x{n}x{k}/speedup_vs_sw", us,
+            f"{speedup:.1f}|{paper or ''}",
+        )
+        rows.add(f"fig7a/gemm_{m}x{n}x{k}/utilization", None, f"{c.utilization:.4f}")
+
+
+def fig7b_parameter_sweep(rows: Rows):
+    """Fig 7b: sensitivity to L, H, P at fixed 512^3."""
+    base = dict(L=12, H=4, P=3)
+    for L in (4, 8, 12, 16, 24, 32):
+        inst = pm.RedmuleInstance(**{**base, "L": L})
+        rows.add(f"fig7b/L={L}/cycles", None, pm.redmule_cycles(512, 512, 512, inst).cycles)
+    for H in (2, 4, 8, 16):
+        inst = pm.RedmuleInstance(**{**base, "H": H})
+        rows.add(f"fig7b/H={H}/cycles", None, pm.redmule_cycles(512, 512, 512, inst).cycles)
+    for P in (1, 3, 7, 15):
+        inst = pm.RedmuleInstance(**{**base, "P": P})
+        rows.add(f"fig7b/P={P}/cycles", None, pm.redmule_cycles(512, 512, 512, inst).cycles)
+
+
+def _workload_cycles(gemms, inst, sw_kind="gemm"):
+    red = sum(pm.redmule_cycles(g.M, g.N, g.K, inst).cycles for g in gemms)
+    sw = sum(pm.sw_cycles(g.M, g.N, g.K, sw_kind) for g in gemms)
+    return red, sw
+
+
+def fig8a_resnet8_training(rows: Rows):
+    """Fig 8a: ResNet8 training step, FP16 (12x4) and FP8 (12x8)."""
+    gemms = pt.training_gemms(pt.RESNET8)
+    red16, sw = _workload_cycles(gemms, pm.REDMULE_12x4_FP16)
+    red8, _ = _workload_cycles(gemms, pm.REDMULE_12x8_FP8)
+    im2col, other = pt.RESNET8_IM2COL_SW_CYCLES, pt.RESNET8_OTHER_SW_CYCLES
+
+    mm16 = sw / red16
+    step16 = (sw + im2col + other) / (red16 + im2col + other)
+    step16_dm = (sw + im2col + other) / (red16 + im2col / 2 + other)
+    # fp8 "up to 28.5x" in the paper is the best layer, not the average.
+    mm8_peak = max(
+        pm.sw_cycles(g.M, g.N, g.K)
+        / pm.redmule_cycles(g.M, g.N, g.K, pm.REDMULE_12x8_FP8).cycles
+        for g in gemms
+    )
+    step8 = (sw + im2col + other) / (red8 + im2col / 2 + other)
+
+    g = pt.RESNET8[1]
+    us = _engine_matmul_us(g.M, g.N, g.K)
+    rows.add("fig8a/resnet8/matmul_speedup_fp16", us, f"{mm16:.1f}|14.6")
+    rows.add("fig8a/resnet8/step_speedup_fp16", None, f"{step16:.1f}|3.1")
+    rows.add("fig8a/resnet8/step_speedup_fp16_datamover", None, f"{step16_dm:.1f}|4.9")
+    rows.add("fig8a/resnet8/matmul_speedup_fp8_peak", None, f"{mm8_peak:.1f}|28.5")
+    rows.add("fig8a/resnet8/matmul_speedup_fp8_avg", None, f"{sw/red8:.1f}")
+    rows.add("fig8a/resnet8/step_speedup_fp8_datamover", None, f"{step8:.1f}|5.5")
+
+
+def fig8b_mobilenetv2_training(rows: Rows):
+    """Fig 8b: MobileNetV2 training, FP8; depthwise layers underutilize."""
+    inst = pm.REDMULE_12x8_FP8
+    per_layer = []
+    for g in pt.training_gemms(pt.MOBILENETV2):
+        if g.kind == "depthwise":
+            # per-channel vector-matrix products: K channels of (M, N, 1)
+            red = pm.redmule_cycles(g.M, g.N, 1, inst).cycles * g.K
+            sw = pm.sw_cycles(g.M, g.N, g.K)
+        else:
+            red = pm.redmule_cycles(g.M, g.N, g.K, inst).cycles
+            sw = pm.sw_cycles(g.M, g.N, g.K)
+        per_layer.append((g, sw / red))
+    sps = [s for _, s in per_layer]
+    dw = [s for g, s in per_layer if g.kind == "depthwise"]
+    total_red = sum(
+        pm.redmule_cycles(g.M, g.N, 1, inst).cycles * g.K if g.kind == "depthwise"
+        else pm.redmule_cycles(g.M, g.N, g.K, inst).cycles
+        for g, _ in per_layer
+    )
+    total_sw = sum(pm.sw_cycles(g.M, g.N, g.K) for g, _ in per_layer)
+    other = 0.35 * total_sw  # marshalling/norm overhead present in both
+    rows.add("fig8b/mnv2/avg_layer_speedup_fp8", None, f"{np.mean(sps):.1f}|7.5")
+    rows.add("fig8b/mnv2/peak_layer_speedup_fp8", None, f"{np.max(sps):.1f}|11.2")
+    rows.add("fig8b/mnv2/depthwise_speedup", None, f"{np.mean(dw):.1f}|2.6")
+    rows.add(
+        "fig8b/mnv2/step_speedup", None,
+        f"{(total_sw + other) / (total_red + other):.1f}|6.4",
+    )
+
+
+def fig9_transformer_inference(rows: Rows):
+    """Fig 9: TinyTransformer FP8 inference vs INT8-SIMD software."""
+    inst = pm.REDMULE_12x8_FP8
+    total_red = total_sw = 0.0
+    best = ("", 0.0)
+    for g in pt.TINY_TRANSFORMER:
+        red = pm.redmule_cycles(g.M, g.N, g.K, inst).cycles
+        sw = pm.sw_cycles(g.M, g.N, g.K, "int8")
+        total_red += red
+        total_sw += sw
+        sp = sw / red
+        if sp > best[1]:
+            best = (g.name, sp)
+        rows.add(f"fig9/tinytf/{g.name}/speedup", None, f"{sp:.1f}")
+    rows.add("fig9/tinytf/avg_speedup", None, f"{total_sw/total_red:.1f}|4.0")
+    rows.add(f"fig9/tinytf/peak({best[0]})", None, f"{best[1]:.1f}|5.3")
+
+
+def fig10_error_analysis(rows: Rows):
+    """Fig 10: RMSE vs reduction size N for the three format stacks.
+
+    Inputs live on the fp8/fp16 storage grid; the oracle is the exact
+    product of the same stored values (see DESIGN.md Sec. 6)."""
+    rng = np.random.default_rng(0)
+    for n in (16, 64, 256, 1024):
+        x = jnp.asarray(rng.standard_normal((32, n)).astype(np.float32) / np.sqrt(n))
+        w = jnp.asarray(rng.standard_normal((n, 32)).astype(np.float32))
+        rmse = {}
+        for pol in (REDMULE_FP16, REDMULE_HFP8, REDMULE_HFP8_OUT8):
+            xq = x.astype(pol.storage_fwd).astype(jnp.float32)
+            wq = w.astype(pol.storage_fwd).astype(jnp.float32)
+            exact = np.asarray(jnp.matmul(xq, wq))
+            got = np.asarray(redmule.mp_matmul(xq, wq, pol), np.float32)
+            rmse[pol.name] = float(np.sqrt(np.mean((exact - got) ** 2)))
+        us = _engine_matmul_us(32, n, 32, REDMULE_HFP8)
+        rows.add(f"fig10/N={n}/rmse_fp16", us, f"{rmse['redmule_fp16']:.2e}")
+        rows.add(f"fig10/N={n}/rmse_fp8in_fp16out", None, f"{rmse['redmule_hfp8']:.2e}")
+        rows.add(f"fig10/N={n}/rmse_fp8in_fp8out", None, f"{rmse['redmule_hfp8_out8']:.2e}")
+        rows.add(
+            f"fig10/N={n}/ratio_fp8out_vs_fp16", None,
+            f"{rmse['redmule_hfp8_out8']/max(rmse['redmule_fp16'],1e-12):.0f}x|>100x",
+        )
+
+
+def fig11_leftovers(rows: Rows):
+    """Fig 11: leftover impact on performance + clock-gated power (perf pt)."""
+    for m in (1, 4, 8, 12, 16, 24):
+        g = pm.gflops(m, 96, 96, freq_hz=pm.FREQ_PERF_HZ)
+        pf = pm.clock_gating_power_factor(m, 96, 96)
+        paper = {1: "4.7", 12: "55.8"}.get(m, "")
+        rows.add(f"fig11/M={m}/gops", None, f"{g:.1f}|{paper}")
+        rows.add(f"fig11/M={m}/power_factor", None, f"{pf:.2f}")
+
+
+def fig14_gemmops(rows: Rows):
+    """Fig 14: GEMM-Ops speedup + energy efficiency vs SW; plus a real
+    engine execution of each Table-1 op."""
+    c = pm.redmule_cycles(512, 512, 512).cycles
+    rows.add("fig14/group1/speedup", None,
+             f"{pm.sw_cycles(512,512,512,'g1')/c:.0f}|47")
+    rows.add("fig14/group2/speedup", None,
+             f"{pm.sw_cycles(512,512,512,'g2')/c:.0f}|62")
+    rows.add("fig14/group1/gflops_per_w", None,
+             f"{pm.gflops_per_watt(512,512,512,kind='g1'):.0f}|842")
+    rows.add("fig14/group2/gflops_per_w", None,
+             f"{pm.gflops_per_watt(512,512,512,kind='g2'):.0f}|1193")
+    x = jnp.ones((96, 96), jnp.float32)
+    for gop in semiring.TABLE1:
+        f = jax.jit(
+            functools.partial(ops.gemm_op, gop=gop, policy=get_policy("fp32"))
+        )
+        us = time_call(f, x, x, x)
+        rows.add(f"fig14/engine_exec/{gop.name}", us, "xla-backend")
+
+
+def table2_sota(rows: Rows):
+    """Table 2: RedMulE rows (ours-model vs paper)."""
+    cases = [
+        ("12x4_fp16_gemm_eff", pm.REDMULE_12x4_FP16, "gemm", "eff", 44.8, 755),
+        ("12x4_fp16_gemm_perf", pm.REDMULE_12x4_FP16, "gemm", "perf", 58.5, 506),
+        ("12x4_fp16_g1_eff", pm.REDMULE_12x4_FP16, "g1", "eff", 44.8, 842),
+        ("12x4_fp16_g2_eff", pm.REDMULE_12x4_FP16, "g2", "eff", 44.8, 1193),
+        ("12x8_fp8_gemm_eff", pm.REDMULE_12x8_FP8, "gemm", "eff", 89.7, 920),
+        ("12x8_fp8_gemm_perf", pm.REDMULE_12x8_FP8, "gemm", "perf", 117.0, 608),
+        ("12x8_fp8_g2_eff", pm.REDMULE_12x8_FP8, "g2", "eff", 89.7, 1666),
+    ]
+    for name, inst, kind, point, p_gflops, p_eff in cases:
+        freq = pm.FREQ_EFF_HZ if point == "eff" else pm.FREQ_PERF_HZ
+        g = pm.gflops(96, 96, 96, inst, freq)
+        e = pm.gflops_per_watt(96, 96, 96, inst, kind=kind, point=point)
+        rows.add(f"table2/{name}/gflops", None, f"{g:.1f}|{p_gflops}")
+        rows.add(f"table2/{name}/gflops_per_w", None, f"{e:.0f}|{p_eff}")
+
+
+ALL = [
+    fig7a_gemm_speedups,
+    fig7b_parameter_sweep,
+    fig8a_resnet8_training,
+    fig8b_mobilenetv2_training,
+    fig9_transformer_inference,
+    fig10_error_analysis,
+    fig11_leftovers,
+    fig14_gemmops,
+    table2_sota,
+]

@@ -1,0 +1,42 @@
+"""Roofline rows from dry-run artifacts (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Rows
+from repro.configs import get_config
+from repro.roofline.analysis import model_flops_decode, model_flops_train
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun_final")
+
+
+def roofline_rows(rows: Rows, artifact_dir: str = ARTIFACT_DIR):
+    files = sorted(glob.glob(os.path.join(artifact_dir, "*.json")))
+    if not files:
+        rows.add("roofline/no_artifacts_found_run_dryrun_first", None, artifact_dir)
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        tag = os.path.basename(f)[:-5]
+        if d.get("status") != "ok":
+            rows.add(f"roofline/{tag}/status", None, d.get("status"))
+            continue
+        r = d["roofline"]
+        cfg = get_config(d["arch"])
+        n_active = cfg.active_param_count()
+        if d["kind"] == "train":
+            mf = model_flops_train(n_active, d["seq"] * d["batch"])
+        elif d["kind"] == "prefill":
+            mf = model_flops_decode(n_active, d["seq"] * d["batch"])
+        else:
+            mf = model_flops_decode(n_active, d["batch"])
+        mf /= d["n_chips"]
+        useful = mf / max(r["hlo_flops"], 1.0)
+        rows.add(f"roofline/{tag}/compute_s", None, f"{r['compute_s']:.3e}")
+        rows.add(f"roofline/{tag}/memory_s", None, f"{r['memory_s']:.3e}")
+        rows.add(f"roofline/{tag}/collective_s", None, f"{r['collective_s']:.3e}")
+        rows.add(f"roofline/{tag}/bottleneck", None, r["bottleneck"])
+        rows.add(f"roofline/{tag}/model_vs_hlo_flops", None, f"{useful:.2f}")

@@ -1,0 +1,23 @@
+"""Benchmark driver: one section per paper table/figure + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV. ``derived`` is ``ours|paper`` when
+the paper states a value for the row.
+"""
+from __future__ import annotations
+
+from benchmarks import paper_figs
+from benchmarks.common import Rows
+from benchmarks.roofline_table import roofline_rows
+
+
+def main() -> None:
+    rows = Rows()
+    print("name,us_per_call,derived")
+    for bench in paper_figs.ALL:
+        bench(rows)
+    roofline_rows(rows)
+    rows.emit()
+
+
+if __name__ == "__main__":
+    main()

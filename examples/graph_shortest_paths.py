@@ -1,0 +1,51 @@
+"""All-pairs shortest paths with GEMM-Ops (paper Table 1, 'APSP').
+
+The min-plus semiring matmul is one relaxation step; repeated squaring of
+the distance matrix converges in ceil(log2(V)) engine calls. This is the
+graph-analytics use case RedMulE's GEMM-Ops target (drone path planning,
+Sec. 2.4). Verified against a dense Floyd-Warshall.
+
+  PYTHONPATH=src python examples/graph_shortest_paths.py
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gemm_op
+
+V = 48
+rng = np.random.default_rng(7)
+
+# Random sparse-ish weighted digraph.
+adj = rng.random((V, V)).astype(np.float32) * 10
+mask = rng.random((V, V)) < 0.15
+INF = np.float32(3.0e4)  # large-M representable in fp16 too
+dist = np.where(mask, adj, INF)
+np.fill_diagonal(dist, 0.0)
+
+# Reference: Floyd-Warshall.
+fw = dist.copy()
+for k in range(V):
+    fw = np.minimum(fw, fw[:, k : k + 1] + fw[k : k + 1, :])
+
+# Engine: repeated min-plus squaring, D <- min(D, D (+,min) D).
+d = jnp.asarray(dist)
+steps = math.ceil(math.log2(V))
+for i in range(steps):
+    d = gemm_op(d, d, d, op="apsp")
+    print(f"step {i+1}/{steps}: mean distance {float(jnp.mean(jnp.minimum(d, INF))):.3f}")
+
+err = np.max(np.abs(np.asarray(d) - fw))
+print(f"\nmax |engine - floyd_warshall| = {err:.2e}")
+assert err < 1e-3
+print("OK — APSP via RedMulE GEMM-Ops matches Floyd-Warshall")
+
+# Bonus: maximum-capacity path (Group 2: circ=min, star=max).
+cap = np.where(mask, adj, np.float32(0.0))
+np.fill_diagonal(cap, INF)
+c = jnp.asarray(cap)
+for _ in range(steps):
+    c = gemm_op(c, c, c, op="max_capacity_path")
+print("max-capacity path matrix computed via (min, max) semiring — "
+      f"mean bottleneck capacity {float(jnp.mean(jnp.minimum(c, INF))):.3f}")

@@ -1,0 +1,87 @@
+"""Paper-faithful TinyML training: hybrid-FP8 vs FP16 vs FP32 (Sec. 5.2.2-3).
+
+Trains a ResNet8-class MLP (the paper's conv layers are im2col GEMMs — here
+the GEMMs *are* the model) on a synthetic classification task under three
+RedMulE precision policies, demonstrating the paper's central claim: hybrid
+FP8 (E4M3 fwd / E5M2 bwd, FP16-class internal) trains to ~FP32 quality.
+
+  PYTHONPATH=src python examples/train_tinyml.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mp_matmul
+from repro.core.precision import get_policy
+
+DIMS = [64, 128, 128, 10]  # ResNet8-scale GEMM stack
+STEPS, BATCH, LR = 300, 64, 0.05
+
+
+def init(key):
+    ks = jax.random.split(key, len(DIMS) - 1)
+    return [
+        jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a)
+        for k, (a, b) in zip(ks, zip(DIMS[:-1], DIMS[1:]))
+    ]
+
+
+def forward(params, x, policy):
+    h = x
+    for i, w in enumerate(params):
+        h = mp_matmul(h, w, policy)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_data(key):
+    """Linearly-separable-ish 10-class problem."""
+    proj = jax.random.normal(key, (DIMS[0], 10))
+    def batch(k):
+        x = jax.random.normal(k, (BATCH, DIMS[0]))
+        y = jnp.argmax(x @ proj, axis=-1)
+        return x, y
+    return batch
+
+
+def run(policy_name: str, seed=0):
+    policy = get_policy(policy_name)
+    params = init(jax.random.PRNGKey(seed))
+    batch_fn = make_data(jax.random.PRNGKey(99))
+
+    @jax.jit
+    def step(params, k):
+        x, y = batch_fn(k)
+
+        def loss_fn(ps):
+            logits = forward(ps, x, policy).astype(jnp.float32)
+            return jnp.mean(
+                jax.nn.logsumexp(logits, -1)
+                - jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+            )
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        return [p - LR * gi for p, gi in zip(params, g)], loss
+
+    key = jax.random.PRNGKey(seed + 1)
+    loss = None
+    for i in range(STEPS):
+        key, k = jax.random.split(key)
+        params, loss = step(params, k)
+    x, y = batch_fn(jax.random.PRNGKey(12345))
+    acc = float(jnp.mean(jnp.argmax(forward(params, x, policy), -1) == y))
+    return float(loss), acc
+
+
+if __name__ == "__main__":
+    print(f"{'policy':16s} {'final loss':>10s} {'accuracy':>9s}")
+    results = {}
+    for name in ("fp32", "redmule_fp16", "redmule_hfp8"):
+        loss, acc = run(name)
+        results[name] = acc
+        print(f"{name:16s} {loss:10.4f} {acc:9.1%}")
+    # The paper's claim: hybrid-FP8 training retains accuracy.
+    assert results["redmule_hfp8"] > results["fp32"] - 0.05, results
+    print("\nOK — hybrid-FP8 training matches FP32 within 5% accuracy "
+          "(paper Sec. 4.2.3 / Fig. 10)")

@@ -1,0 +1,115 @@
+"""Generate EXPERIMENTS.md dry-run + roofline markdown tables from artifacts.
+
+  PYTHONPATH=src python scripts/make_tables.py [artifacts/dryrun]
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.roofline.analysis import (  # noqa: E402
+    model_flops_decode,
+    model_flops_train,
+)
+
+ORDER = [
+    "chatglm3-6b", "gemma2-2b", "granite-3-8b", "deepseek-coder-33b",
+    "phi3.5-moe-42b-a6.6b", "granite-moe-1b-a400m", "internvl2-76b",
+    "xlstm-125m", "seamless-m4t-large-v2", "recurrentgemma-2b",
+]
+
+HINTS = {
+    "compute": "increase arithmetic efficiency (fuse, cut remat recompute)",
+    "memory": "cut HBM traffic (fp8 storage/KV, larger fusion, bigger chunks)",
+    "collective": "cut wire bytes (FSDP vs TP, vocab-parallel CE, fp8 grads)",
+}
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.2f}M"
+    return f"{b/1e3:.1f}K"
+
+
+def load(d, mesh_kind, tag=""):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        j = json.load(open(f))
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        file_tag = parts[3] if len(parts) > 3 else ""
+        if j.get("mesh_kind", "single_pod") != mesh_kind or file_tag != tag:
+            continue
+        out[(parts[0], parts[1])] = j
+    return out
+
+
+def useful_ratio(j):
+    cfg = get_config(j["arch"])
+    n_active = cfg.active_param_count()
+    if j["kind"] == "train":
+        mf = model_flops_train(n_active, j["seq"] * j["batch"])
+    elif j["kind"] == "prefill":  # forward-only over seq*batch tokens
+        mf = model_flops_decode(n_active, j["seq"] * j["batch"])
+    else:  # decode: one token per sequence
+        mf = model_flops_decode(n_active, j["batch"])
+    mf /= j["n_chips"]
+    return mf / max(j["roofline"]["hlo_flops"], 1.0)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    for mesh_kind in ("single_pod", "multi_pod"):
+        cells = load(d, mesh_kind)
+        if not cells:
+            continue
+        title = "16x16 (256 chips)" if mesh_kind == "single_pod" else "2x16x16 (512 chips)"
+        print(f"\n### Mesh {title}\n")
+        print("| arch | shape | status | params | bytes/dev (arg+tmp) | "
+              "HLO GFLOP/dev | HBM GB/dev | coll GB/dev | compute s | "
+              "memory s | collective s | bound | 6ND/HLO |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+        for arch in ORDER:
+            for shape in SHAPES:
+                j = cells.get((arch, shape))
+                if j is None:
+                    continue
+                if j["status"] == "skipped":
+                    print(f"| {arch} | {shape} | skip (full-attn @500k) "
+                          f"| | | | | | | | | | |")
+                    continue
+                if j["status"] != "ok":
+                    print(f"| {arch} | {shape} | **FAILED** | | | | | | | | | | |")
+                    continue
+                r = j["roofline"]
+                m = j["memory"]
+                ur = useful_ratio(j)
+                print(
+                    f"| {arch} | {shape} | ok | {j['n_params']/1e9:.2f}B "
+                    f"| {fmt_bytes(m['argument_bytes'])}+{fmt_bytes(m['temp_bytes'])} "
+                    f"| {r['hlo_flops']/1e9:.1f} "
+                    f"| {r['hlo_bytes']/1e9:.1f} "
+                    f"| {r['coll_bytes']/1e9:.2f} "
+                    f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+                    f"| {r['collective_s']:.3g} | {r['bottleneck']} "
+                    f"| {ur:.2f} |"
+                )
+        # bottleneck summary
+        bound = {}
+        for j in cells.values():
+            if j["status"] == "ok":
+                b = j["roofline"]["bottleneck"]
+                bound[b] = bound.get(b, 0) + 1
+        print(f"\nBottleneck counts: {bound}")
+        print(f"Hints: {HINTS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: RedMulE — mixed-precision GEMM-Ops engine as a JAX framework.
+
+Reproduction of Tortorella et al., "RedMulE: A Mixed-Precision Matrix-Matrix
+Operation Engine ..." (2023), scaled from a TinyML accelerator to a
+multi-pod JAX training/serving framework (see DESIGN.md).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, mesh-reshardable.
+
+Layout: <dir>/step_<N>/
+  - arrays.npz        flattened pytree leaves (fp8 leaves stored as uint8 view)
+  - meta.json         tree structure, dtypes, step, extra metadata
+  - _COMPLETE         commit marker written last (atomicity: readers ignore
+                      directories without it, so a worker dying mid-write
+                      never corrupts restore)
+
+Restore is mesh-agnostic: leaves are read as host numpy and re-placed with
+``jax.device_put`` against the *current* mesh/sharding — this is the elastic
+path (restart on a different pod count re-shards transparently).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# dtypes numpy.savez cannot round-trip natively (ml_dtypes extension types);
+# stored as same-width unsigned-int views + the dtype string in meta.json.
+_NONNATIVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8, "float8_e4m3": np.uint8}
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any, *, extra: dict | None = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        if str(arr.dtype) in _NONNATIVE:
+            arr = arr.view(_NONNATIVE[str(arr.dtype)])
+        arrays[f"leaf_{i}"] = arr
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(
+            {
+                "step": step,
+                "treedef": str(treedef),
+                "n_leaves": len(leaves),
+                "dtypes": dtypes,
+                "extra": extra or {},
+            },
+            f,
+        )
+    with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    _gc(directory, keep)
+    return path
+
+
+class AsyncSaver:
+    """Overlap checkpoint writes with training (one in flight)."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save(self, directory: str, step: int, tree: Any, **kw):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(directory, step, host_tree), kwargs=kw, daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def _gc(directory: str, keep: int):
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in ckpts[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in os.listdir(directory):
+        p = os.path.join(directory, d)
+        if (
+            d.startswith("step_")
+            and os.path.exists(os.path.join(p, "_COMPLETE"))
+        ):
+            best = max(best or -1, int(d.split("_")[1]))
+    return best
+
+
+def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of NamedSharding
+    for elastic re-placement on the current mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "_COMPLETE")):
+        raise FileNotFoundError(f"incomplete or missing checkpoint: {path}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    assert meta["n_leaves"] == len(leaves), "checkpoint/tree structure mismatch"
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(leaves)
+    )
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        dt = meta["dtypes"][i]
+        if dt in _NONNATIVE:
+            arr = arr.view(jnp.dtype(dt))
+        arr = arr.astype(ref.dtype) if str(ref.dtype) != dt else arr
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape, i)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(directory: str, like: Any, *, shardings: Any = None):
+    step = latest_step(directory)
+    if step is None:
+        return None, None
+    return step, restore(directory, step, like, shardings=shardings)

@@ -1,0 +1,44 @@
+"""Architecture config registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+# arch id -> module name
+_ARCHS = {
+    "chatglm3-6b": "chatglm3_6b",
+    "gemma2-2b": "gemma2_2b",
+    "granite-3-8b": "granite3_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "internvl2-76b": "internvl2_76b",
+    "xlstm-125m": "xlstm_125m",
+    "seamless-m4t-large-v2": "seamless_m4t_v2",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_ARCHS)
+
+# Input-shape set shared by all LM-family archs: name -> (seq_len, batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Whether (arch x shape) is a runnable dry-run cell (DESIGN.md Sec. 4)."""
+    if shape == "long_500k" and not cfg.supports_500k:
+        return False, (
+            "long_500k needs sub-quadratic context; full-attention arch skipped"
+        )
+    return True, ""

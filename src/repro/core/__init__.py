@@ -1,0 +1,25 @@
+"""Core RedMulE engine: GEMM-Ops semirings, precision policies, perf model."""
+from repro.core import perfmodel, precision, semiring
+from repro.core.precision import PrecisionPolicy, get_policy
+from repro.core.redmule import (
+    RedMulEConfig,
+    gemm_op,
+    linear,
+    mp_matmul,
+)
+from repro.core.semiring import TABLE1, GemmOp, Op
+
+__all__ = [
+    "GemmOp",
+    "Op",
+    "PrecisionPolicy",
+    "RedMulEConfig",
+    "TABLE1",
+    "gemm_op",
+    "get_policy",
+    "linear",
+    "mp_matmul",
+    "perfmodel",
+    "precision",
+    "semiring",
+]

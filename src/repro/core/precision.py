@@ -1,0 +1,142 @@
+"""Precision policies for the RedMulE engine (paper Sec. 4.2.3).
+
+RedMulE stores tensors in hybrid FP8 — {1,4,3} (E4M3) for forward/activations,
+{1,5,2} (E5M2) for backward/gradients — while *computing* at FP16 internally
+with wider accumulation. We model this exactly:
+
+  - ``storage_*`` dtypes are what crosses "memory" (HBM in our TPU mapping):
+    inputs are cast storage -> compute on load (the paper's input cast unit)
+    and compute -> storage on store (the output cast unit).
+  - ``compute`` is the CE-internal format. On TPU we default to bfloat16
+    (MXU-native); ``fp16`` mode reproduces the paper's numerics bit-for-role.
+  - ``acc`` is the accumulation format (fp32 on MXU; the paper's FMA keeps a
+    wider internal accumulator as well).
+
+The policy also drives training: forward matmuls see E4M3 operands, backward
+matmuls see E5M2 gradient operands (paper Sec. 4.2.3 / refs [10, 11]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+# Short names for the formats the paper discusses.
+E4M3 = jnp.float8_e4m3fn  # {1,4,3}: forward / activations
+E5M2 = jnp.float8_e5m2  # {1,5,2}: backward / gradients
+FP16 = jnp.float16
+BF16 = jnp.bfloat16
+FP32 = jnp.float32
+
+_DTYPES = {
+    "e4m3": E4M3,
+    "e5m2": E5M2,
+    "fp8": E4M3,
+    "fp16": FP16,
+    "bf16": BF16,
+    "fp32": FP32,
+}
+
+
+def as_dtype(x: Any):
+    if isinstance(x, str):
+        return _DTYPES[x]
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Dtype roles for one RedMulE GEMM (and its VJP)."""
+
+    name: str
+    storage_fwd: Any  # X/W operand storage format on the forward path
+    storage_bwd: Any  # gradient storage format on the backward path
+    compute: Any  # CE-internal element format
+    acc: Any  # accumulator format
+    out: Any  # Z output storage format
+    param: Any = FP32  # master-parameter format (optimizer side)
+
+    def __post_init__(self):
+        for f in ("storage_fwd", "storage_bwd", "compute", "acc", "out", "param"):
+            object.__setattr__(self, f, as_dtype(getattr(self, f)))
+
+    @property
+    def fp8_storage(self) -> bool:
+        return jnp.dtype(self.storage_fwd).itemsize == 1
+
+    def cast_in_fwd(self, x):
+        """Input cast unit, forward path: storage -> compute."""
+        if x.dtype != self.storage_fwd:
+            x = x.astype(self.storage_fwd)  # quantize to the storage grid
+        return x.astype(self.compute)
+
+    def cast_in_bwd(self, g):
+        """Input cast unit, backward path (gradients): storage -> compute."""
+        if g.dtype != self.storage_bwd:
+            g = g.astype(self.storage_bwd)
+        return g.astype(self.compute)
+
+    def cast_out(self, z):
+        """Output cast unit: accumulator -> storage."""
+        return z.astype(self.out)
+
+
+# The paper's configurations -------------------------------------------------
+
+# Paper-faithful FP16 mode: 16-bit storage and datapath, wide accumulate.
+REDMULE_FP16 = PrecisionPolicy(
+    "redmule_fp16", storage_fwd=FP16, storage_bwd=FP16, compute=FP16,
+    acc=FP32, out=FP16,
+)
+
+# Paper-faithful hybrid FP8: E4M3 fwd / E5M2 bwd storage, FP16 datapath,
+# FP16 output (the Fig. 10 "negligible loss" configuration).
+REDMULE_HFP8 = PrecisionPolicy(
+    "redmule_hfp8", storage_fwd=E4M3, storage_bwd=E5M2, compute=FP16,
+    acc=FP32, out=FP16,
+)
+
+# FP8-out variant (the Fig. 10 ">100x RMSE" configuration — storage-optimal,
+# used where the consumer re-quantizes anyway, e.g. KV cache writes).
+REDMULE_HFP8_OUT8 = PrecisionPolicy(
+    "redmule_hfp8_out8", storage_fwd=E4M3, storage_bwd=E5M2, compute=FP16,
+    acc=FP32, out=E4M3,
+)
+
+# TPU-native adaptation: bf16 datapath (MXU), fp8 storage.
+TPU_HFP8 = PrecisionPolicy(
+    "tpu_hfp8", storage_fwd=E4M3, storage_bwd=E5M2, compute=BF16,
+    acc=FP32, out=BF16,
+)
+
+# TPU-native 16-bit baseline.
+TPU_BF16 = PrecisionPolicy(
+    "tpu_bf16", storage_fwd=BF16, storage_bwd=BF16, compute=BF16,
+    acc=FP32, out=BF16,
+)
+
+# Full-precision reference.
+FP32_REF = PrecisionPolicy(
+    "fp32", storage_fwd=FP32, storage_bwd=FP32, compute=FP32,
+    acc=FP32, out=FP32,
+)
+
+POLICIES: dict[str, PrecisionPolicy] = {
+    p.name: p
+    for p in (
+        REDMULE_FP16,
+        REDMULE_HFP8,
+        REDMULE_HFP8_OUT8,
+        TPU_HFP8,
+        TPU_BF16,
+        FP32_REF,
+    )
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}") from None

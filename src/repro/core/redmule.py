@@ -1,0 +1,189 @@
+"""The RedMulE engine as a first-class JAX feature.
+
+Every matrix product in the framework (model projections, attention dots,
+embedding lookups' dual, optimizer-side casts) routes through this module so
+the paper's technique — hybrid-FP8 storage with FP16-class internal compute
+and wide accumulation — is applied uniformly, and so the distribution layer
+can reason about one GEMM substrate.
+
+Two execution paths:
+  - ``backend='xla'`` (default, used inside models under pjit): operands are
+    quantized to the storage grid (value-level), the dot runs on the MXU with
+    fp32 accumulation. This is what the 512-chip dry-run lowers.
+  - ``backend='pallas*'``: the explicit fused kernel in ``repro.kernels``
+    (fp8 bytes cross HBM, cast happens in VMEM). Validated in interpret mode;
+    the TPU lowering is the deployment path for fp8-storage GEMMs.
+
+Training rule (paper Sec. 4.2.3, refs [10, 11]): forward GEMMs consume E4M3
+operands; backward GEMMs consume the incoming gradient quantized to E5M2 and
+the saved E4M3 residuals. Residuals are *stored* in fp8 when the policy has
+fp8 storage — halving activation memory, the software analogue of the paper's
+"FP8 doubles effective bandwidth and CE count".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring
+from repro.core.precision import (
+    FP32_REF,
+    PrecisionPolicy,
+    TPU_BF16,
+    get_policy,
+)
+from repro.core.semiring import GemmOp
+from repro.kernels import ops as kernel_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class RedMulEConfig:
+    """Engine configuration (the paper's design-time parameters + TPU tiles)."""
+
+    # Paper datapath parameters — drive the perf model and the Pallas tiles.
+    L: int = 12
+    H: int = 4
+    P: int = 3
+    # TPU BlockSpec tiles for the Pallas path.
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    policy: PrecisionPolicy = TPU_BF16
+    backend: str = "xla"
+
+    @property
+    def tile_cols(self) -> int:
+        """H*(P+1): the column width of one datapath tile (paper Sec. 4.3)."""
+        return self.H * (self.P + 1)
+
+
+def _quant(x: jnp.ndarray, grid_dtype) -> jnp.ndarray:
+    """Value-level quantization to ``grid_dtype``'s lattice, kept in x.dtype."""
+    if jnp.dtype(grid_dtype).itemsize >= jnp.dtype(x.dtype).itemsize:
+        return x
+    return x.astype(grid_dtype).astype(x.dtype)
+
+
+def _swap_last(a):
+    return jnp.swapaxes(a, -1, -2)
+
+
+# ----------------------------------------------------------------------------
+# mp_matmul: the mixed-precision GEMM with the paper's hybrid-FP8 VJP.
+# Supports a: (..., M, K) @ b: (..., K, N) with b either matching-batched or
+# unbatched (2D) — covers linear layers and attention dots without einsum.
+# ----------------------------------------------------------------------------
+
+
+def mp_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: PrecisionPolicy = TPU_BF16):
+    """z = a @ b under the policy. a: (..., M, K); b: (..., K, N) or (K, N)."""
+    return _mp_core(a.astype(policy.compute), b.astype(policy.compute), policy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mp_core(a, b, policy: PrecisionPolicy):
+    z, _ = _mp_core_fwd(a, b, policy)
+    return z
+
+
+def _store_residual(x, policy: PrecisionPolicy):
+    if policy.fp8_storage:
+        return x.astype(policy.storage_fwd)  # halve residual bytes
+    return x
+
+
+def _mp_core_fwd(a, b, policy: PrecisionPolicy):
+    aq = _quant(a, policy.storage_fwd)
+    bq = _quant(b, policy.storage_fwd)
+    z = jnp.matmul(aq, bq, preferred_element_type=policy.acc)
+    z = z.astype(policy.out)
+    return z, (_store_residual(aq, policy), _store_residual(bq, policy))
+
+
+def _sum_to_shape(x, shape):
+    """Sum out broadcast batch dims so grads match the primal shape."""
+    if x.shape == tuple(shape):
+        return x
+    extra = x.ndim - len(shape)
+    if extra > 0:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(i for i, (xs, s) in enumerate(zip(x.shape, shape)) if xs != s)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x.reshape(shape)
+
+
+def _mp_core_bwd(policy: PrecisionPolicy, res, g):
+    aq, bq = res
+    # Backward GEMMs consume the E5M2-quantized gradient (paper's bwd format).
+    gq = _quant(g.astype(policy.compute), policy.storage_bwd)
+    a_shape, b_shape = aq.shape, bq.shape
+    aq = aq.astype(policy.compute)
+    bq = bq.astype(policy.compute)
+    da = jnp.matmul(gq, _swap_last(bq), preferred_element_type=policy.acc)
+    db = jnp.matmul(_swap_last(aq), gq, preferred_element_type=policy.acc)
+    da = _sum_to_shape(da, a_shape).astype(policy.compute)
+    db = _sum_to_shape(db, b_shape).astype(policy.compute)
+    return da, db
+
+
+_mp_core.defvjp(_mp_core_fwd, _mp_core_bwd)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
+           policy: PrecisionPolicy = TPU_BF16) -> jnp.ndarray:
+    """y = x @ w (+ b) through the engine. x: (..., K), w: (K, N)."""
+    y = mp_matmul(x, w, policy)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def gemm_op(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    y: jnp.ndarray | None = None,
+    op: str | GemmOp = "matmul",
+    *,
+    policy: PrecisionPolicy | str = FP32_REF,
+    config: RedMulEConfig | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Full GEMM-Op surface (paper Table 1): Z = star(Y, star_k(circ(X, W))).
+
+    Semiring ops are non-differentiable here (graph-analytics use cases);
+    gradients are stopped explicitly.
+    """
+    gop = semiring.get(op) if isinstance(op, str) else op
+    if isinstance(policy, str):
+        policy = get_policy(policy)
+    cfg = config or RedMulEConfig()
+    backend = backend or cfg.backend
+    out = kernel_ops.gemm_op(
+        x,
+        w,
+        y,
+        gop=gop,
+        policy=policy,
+        block_m=cfg.block_m,
+        block_n=cfg.block_n,
+        block_k=cfg.block_k,
+        backend=backend,
+    )
+    if not gop.is_gemm:
+        out = jax.lax.stop_gradient(out)
+    return out
+
+
+# fp8 storage helpers (KV cache / parameter compression) ----------------------
+
+
+def to_fp8_storage(x: jnp.ndarray, policy: PrecisionPolicy) -> jnp.ndarray:
+    return x.astype(policy.storage_fwd) if policy.fp8_storage else x
+
+
+def from_storage(x: jnp.ndarray, policy: PrecisionPolicy) -> jnp.ndarray:
+    return x.astype(policy.compute)

@@ -1,0 +1,126 @@
+"""GEMM-Ops semiring definitions (paper Table 1).
+
+A GEMM-Op is ``Z = (X circ W) star Y`` where ``circ`` is the element-wise map
+operator applied to (x, w) pairs and ``star`` is both the k-reduction operator
+and the Y-combination operator (they are the same operator in RedMulE: the CE
+feedback path reuses the second-stage FNCOMP/FMA for accumulation):
+
+    Z[m, n] = star( Y[m, n],  star_k( circ(X[m, k], W[k, n]) ) )
+
+For the canonical GEMM (circ=mul, star=add) this is ``Z = X @ W + Y``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+class Op(enum.Enum):
+    """Elementary operators available to the CE stages."""
+
+    MUL = "mul"
+    ADD = "add"
+    MIN = "min"
+    MAX = "max"
+
+
+_OP_FN: dict[Op, Callable] = {
+    Op.MUL: jnp.multiply,
+    Op.ADD: jnp.add,
+    Op.MIN: jnp.minimum,
+    Op.MAX: jnp.maximum,
+}
+
+# Identity element of each operator when used as a *reduction* (star).
+_REDUCE_IDENTITY: dict[Op, float] = {
+    Op.ADD: 0.0,
+    Op.MIN: float("inf"),
+    Op.MAX: float("-inf"),
+    # MUL is never a star operator in Table 1, but keep it total.
+    Op.MUL: 1.0,
+}
+
+
+def op_fn(op: Op) -> Callable:
+    return _OP_FN[op]
+
+
+def reduce_identity(op: Op) -> float:
+    return _REDUCE_IDENTITY[op]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmOp:
+    """One row of paper Table 1."""
+
+    name: str
+    circ: Op  # first CE stage (FMA or FNCOMP): maps (x, w) pairs
+    star: Op  # second CE stage: k-reduction and Y-combination
+    group: int  # 0 = plain GEMM, 1 = Group 1, 2 = Group 2 (paper taxonomy)
+
+    @property
+    def is_gemm(self) -> bool:
+        return self.circ is Op.MUL and self.star is Op.ADD
+
+    @property
+    def uses_mxu(self) -> bool:
+        """Only the (mul, add) pair maps onto the MXU; the rest are VPU ops."""
+        return self.is_gemm
+
+
+# Paper Table 1. Group 1: circ in {+, x}, star in {min, max}.
+# Group 2: circ also in {min, max}.
+MATMUL = GemmOp("matmul", Op.MUL, Op.ADD, group=0)
+MAX_CRITICAL_PATH = GemmOp("max_critical_path", Op.ADD, Op.MAX, group=1)
+ALL_PAIRS_SHORTEST_PATH = GemmOp("apsp", Op.ADD, Op.MIN, group=1)
+MAX_RELIABILITY_PATH = GemmOp("max_reliability_path", Op.MUL, Op.MAX, group=1)
+MIN_RELIABILITY_PATH = GemmOp("min_reliability_path", Op.MUL, Op.MIN, group=1)
+MIN_SPANNING_TREE = GemmOp("min_spanning_tree", Op.MAX, Op.MIN, group=2)
+MAX_CAPACITY_PATH = GemmOp("max_capacity_path", Op.MIN, Op.MAX, group=2)
+
+TABLE1: tuple[GemmOp, ...] = (
+    MATMUL,
+    MAX_CRITICAL_PATH,
+    ALL_PAIRS_SHORTEST_PATH,
+    MAX_RELIABILITY_PATH,
+    MIN_RELIABILITY_PATH,
+    MIN_SPANNING_TREE,
+    MAX_CAPACITY_PATH,
+)
+
+BY_NAME: dict[str, GemmOp] = {g.name: g for g in TABLE1}
+# Convenience aliases.
+BY_NAME["gemm"] = MATMUL
+BY_NAME["all_pairs_shortest_path"] = ALL_PAIRS_SHORTEST_PATH
+
+
+def get(name: str) -> GemmOp:
+    try:
+        return BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown GEMM-Op {name!r}; known: {sorted(BY_NAME)}"
+        ) from None
+
+
+def pad_value_for(gop: GemmOp) -> tuple[float, float]:
+    """Padding values (for X/W, for Y) that leave a GEMM-Op result unchanged.
+
+    When M/N/K are padded up to tile multiples, padded k-lanes must contribute
+    the identity of ``star`` after ``circ``:
+      - circ=mul: pad X/W with 0 only works for star=add. For star=min/max pad
+        with the star identity directly on the circ *output*; since circ(mul)
+        with one operand = identity won't give the star identity in general,
+        we pad X/W such that circ(xpad, wpad) == star identity:
+          mul: pad X with 0 and W with +/-inf is ill-defined (0*inf = nan), so
+               we pad *both* with the value whose product is the identity sign:
+               use pad = +inf for MIN / -inf & +inf... — instead the kernels
+               mask padded lanes explicitly; this helper returns the value used
+               for the *masked fill* of circ-outputs and Y.
+    Returns (circ_output_fill, y_fill): fills equal to the star identity.
+    """
+    ident = reduce_identity(gop.star)
+    return ident, ident

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, for_model
+
+__all__ = ["DataConfig", "SyntheticLM", "for_model"]

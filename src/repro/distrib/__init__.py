@@ -1,0 +1,3 @@
+from repro.distrib import collectives, fault, sharding
+
+__all__ = ["collectives", "fault", "sharding"]

@@ -1,0 +1,206 @@
+"""Sharding rules: DP/TP/EP PartitionSpecs derived from parameter paths.
+
+Megatron-style tensor parallelism over the 'model' axis:
+  - QKV / FFN-up / gate projections column-parallel  (d, F) -> P(None, 'model')
+  - O / FFN-down row-parallel                        (F, d) -> P('model', None)
+  - embeddings vocab-sharded, MoE experts sharded over 'model' (EP)
+  - GQA KV projections replicate when kv_heads isn't divisible by the TP size
+  - RG-LRU channel dim shards over 'model' (the recurrence is elementwise per
+    channel, so the scan itself runs fully sharded)
+Stacked (scanned) unit parameters get a leading None for the layer axis.
+Batch/activations shard over the data axes (('pod','data') multi-pod).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _rules(cfg: ModelConfig, tp: int) -> list[tuple[str, P]]:
+    """(regex, spec-for-unstacked-leaf) — first match wins."""
+    kv_shardable = cfg.n_kv_heads % tp == 0
+    kv_spec = P(None, "model") if kv_shardable else P(None, None)
+    ffn_col = P(None, "model") if cfg.d_ff % tp == 0 else P(None, None)
+    ffn_row = P("model", None) if cfg.d_ff % tp == 0 else P(None, None)
+    dm_col = P(None, "model") if cfg.d_model % tp == 0 else P(None, None)
+    dm_row = P("model", None) if cfg.d_model % tp == 0 else P(None, None)
+    rnn_col = P(None, "model") if cfg.d_rnn % tp == 0 else P(None, None)
+    rnn_row = P("model", None) if cfg.d_rnn % tp == 0 else P(None, None)
+    vocab_row = P("model", None) if cfg.vocab_size % tp == 0 else P(None, None)
+    q_spec = P(None, "model") if (cfg.n_heads * cfg.head_dim) % tp == 0 else P(None, None)
+    ep_ok = cfg.n_experts % tp == 0 if cfg.is_moe else False
+
+    return [
+        (r".*embed/table$", vocab_row),
+        (r".*head/w$", P(None, "model") if cfg.vocab_size % tp == 0 else P(None, None)),
+        (r".*(attn|cross)/q/w$", q_spec),
+        (r".*(attn|cross)/[kv]/w$", kv_spec),
+        (r".*(attn|cross)/o/w$", P("model", None) if (cfg.n_heads * cfg.head_dim) % tp == 0 else P(None, None)),
+        # MoE experts: EP over 'model'.
+        (r".*moe/router/w$", P(None, None)),
+        (r".*moe/(up|gate)$", P("model", None, None) if ep_ok else P(None, None, None)),
+        (r".*moe/down$", P("model", None, None) if ep_ok else P(None, None, None)),
+        (r".*ffn/(up|gate)/w$", ffn_col),
+        (r".*ffn/down/w$", ffn_row),
+        # xLSTM
+        (r".*cell/qkv/w$", dm_col),
+        (r".*cell/ifg/w$", P(None, None)),
+        (r".*cell/ogate/w$", dm_col),
+        (r".*cell/wx/w$", dm_col),
+        (r".*cell/r$", P(None, None, None, None)),
+        # RG-LRU: channel-sharded recurrence
+        (r".*cell/(in_x|in_gate)/w$", rnn_col),
+        (r".*cell/(gate_a|gate_x)/w$", P(None, "model") if cfg.d_rnn % tp == 0 else P(None, None)),
+        (r".*cell/conv_w$", P(None, "model") if cfg.d_rnn % tp == 0 else P(None, None)),
+        (r".*cell/lam$", P("model") if cfg.d_rnn % tp == 0 else P(None)),
+        (r".*cell/out/w$", rnn_row),
+        (r".*(vis_proj|enc_proj)/w$", dm_col if cfg.d_model % tp == 0 else P(None, None)),
+        (r".*cell/out/w$", dm_row),
+        (r".*norm.*", P(None)),  # any norm scale/bias
+        (r".*", P(None)),  # fallback: replicate
+    ]
+
+
+def param_specs(params: Any, cfg: ModelConfig, tp: int) -> Any:
+    """PartitionSpec tree matching ``params``."""
+    rules = [(re.compile(rx), spec) for rx, spec in _rules(cfg, tp)]
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("units/") or "/units/" in ps
+        for rx, spec in rules:
+            if rx.match(ps):
+                parts = tuple(spec)
+                break
+        # Pad/truncate spec rank to the leaf rank.
+        rank = leaf.ndim - (1 if stacked else 0)
+        parts = tuple(parts[:rank]) + (None,) * max(0, rank - len(parts))
+        if stacked:
+            parts = (None,) + parts  # leading layer axis from scan stacking
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_specs(batch_tree: Any, dp_axes) -> Any:
+    """Shard every batch input over the data axes on dim 0."""
+    def spec(leaf):
+        return P(dp_axes, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_specs(cache_tree: Any, cfg: ModelConfig, dp_axes, tp: int,
+                batch_size: int, n_dp: int) -> Any:
+    """KV caches: batch over data axes (when divisible), kv-heads over model."""
+    kv_shardable = cfg.n_kv_heads % tp == 0
+    batch_ok = batch_size % max(n_dp, 1) == 0 and batch_size >= n_dp
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("units/") or "/units/" in ps
+        rank = leaf.ndim - (1 if stacked else 0)
+        b_ax = dp_axes if batch_ok else None
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", ps):
+            # (B, S, Hkv, hd): shard KV heads when divisible, else shard the
+            # sequence dim (flash-decoding layout) so the cache is never
+            # replicated across the model axis.
+            s_len = leaf.shape[-3]
+            if kv_shardable:
+                parts = (b_ax, None, "model", None)
+            elif s_len % tp == 0 and s_len >= tp:
+                parts = (b_ax, "model", None, None)
+            else:
+                parts = (b_ax, None, None, None)
+        elif re.search(r"state/(C|n|m|h|c|conv)$", ps):
+            parts = (b_ax,) + (None,) * (rank - 1)
+        elif rank >= 1 and leaf.shape[-rank] == batch_size:
+            parts = (b_ax,) + (None,) * (rank - 1)
+        else:
+            parts = (None,) * rank
+        parts = tuple(parts[:rank])
+        if stacked:
+            parts = (None,) + parts
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def tree_shardings(spec_tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def fsdp_param_specs(params: Any, axes, n_total: int) -> Any:
+    """Fully-sharded (ZeRO-3-style) parameter specs: every large leaf shards
+    its largest divisible dim over the *whole* mesh; GSPMD inserts per-use
+    all-gathers. Beats TP when activation traffic > parameter traffic
+    (large global batch) — see EXPERIMENTS.md §Perf."""
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("units/") or "/units/" in ps
+        parts = [None] * leaf.ndim
+        dims = list(enumerate(leaf.shape))
+        if stacked:
+            dims = dims[1:]  # never shard the scanned layer axis
+        # largest divisible dim wins
+        dims.sort(key=lambda t: -t[1])
+        for i, d in dims:
+            if d % n_total == 0 and d >= n_total:
+                parts[i] = axes
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def zero1_specs(specs: Any, shapes: Any, dp_axes, n_dp: int) -> Any:
+    """ZeRO-1: shard optimizer moments over the data axes too.
+
+    For each leaf, find the first axis that is unsharded and divisible by the
+    DP size and shard it over ``dp_axes`` (pure GSPMD ZeRO — XLA inserts the
+    reduce-scatter / all-gather pair around the update).
+    """
+    dp_set = set(dp_axes) if isinstance(dp_axes, (tuple, list)) else {dp_axes}
+
+    def _uses_dp(part):
+        if part is None:
+            return False
+        names = part if isinstance(part, (tuple, list)) else (part,)
+        return bool(dp_set & set(names))
+
+    def extend(spec, shape):
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if any(_uses_dp(p) for p in parts):
+            return P(*parts)  # already dp-sharded (idempotent)
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and dim % n_dp == 0 and dim >= n_dp:
+                parts[i] = dp_axes
+                break
+        return P(*parts)
+
+    return jax.tree.map(
+        lambda s, p: extend(s, p.shape), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )

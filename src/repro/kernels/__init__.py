@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the RedMulE engine + jnp oracle."""
+from repro.kernels import ops, ref
+from repro.kernels.redmule_gemm import redmule_gemm_pallas
+
+__all__ = ["ops", "ref", "redmule_gemm_pallas"]

@@ -1,0 +1,124 @@
+"""Fused flash-attention Pallas kernel (TPU target, interpret-validated).
+
+This is the deployment path for the §Perf A.4 projection (EXPERIMENTS.md):
+the XLA-lowered online-softmax scan materializes per-chunk score tensors in
+HBM (~13 GB per layer pass on the 33B train cell); this kernel keeps the
+(block_q, block_k) score tile in VMEM, so attention HBM traffic collapses to
+q/k/v/o (+ per-row stats).
+
+Same tiling discipline as ``redmule_gemm``: grid (BH, Sq/bq, Sk/bk) with the
+KV dimension innermost, accumulating (acc, m, l) in VMEM scratch across KV
+blocks — the Z-buffer/feedback pattern of the paper's datapath applied to
+attention. Causal masking is positional per tile; fully-masked tiles are
+skipped via ``pl.when`` (the leftover/clock-gating idea, in software).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            nk: int, block_q: int, block_k: int, scale: float,
+            causal: bool, seq_q: int, seq_k: int, softcap: float | None):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    # A causal tile is dead when its lowest q position < its first k position.
+    live = (not causal) or ((qi + 1) * block_q - 1 >= kj * block_k)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(kj == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    true_seq_q: int | None = None,
+    true_seq_k: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (BH, Sq, d); k/v: (BH, Sk, d) — GQA expansion happens in ops.py.
+
+    Sq/Sk are padded to block multiples by the wrapper; ``true_seq_*``
+    mask the padding inside the kernel.
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, ((sq, sk), (bq, bk))
+    nk = sk // bk
+    grid = (bh, sq // bq, nk)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, nk=nk, block_q=bq, block_k=bk, scale=scale,
+        causal=causal, seq_q=true_seq_q or sq, seq_k=true_seq_k or sk,
+        softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

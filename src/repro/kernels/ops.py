@@ -1,0 +1,211 @@
+"""Jit'd wrappers around the RedMulE kernel: padding, dispatch, XLA fallback.
+
+The Pallas kernel requires block-multiple shapes; this module implements the
+paper's "leftover" handling in software: ragged dims are padded to the tile
+grid with values that are absorbed by the (circ, star) pair, computed, and
+sliced back. See ``semiring.pad_value_for`` discussion + DESIGN.md (clock
+gating has no TPU analogue; padding-waste is the software observable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring
+from repro.core.precision import FP32_REF, PrecisionPolicy
+from repro.core.semiring import GemmOp, Op
+from repro.kernels.redmule_gemm import redmule_gemm_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _finite_identity(op: Op, dtype) -> float:
+    """Star identity, clamped to the dtype's finite range (e4m3fn has no inf)."""
+    ident = semiring.reduce_identity(op)
+    fin = float(jnp.finfo(dtype).max)
+    if ident == float("inf"):
+        return fin
+    if ident == float("-inf"):
+        return -fin
+    return ident
+
+
+def _pad_operands(x, w, y, gop: GemmOp, bm: int, bn: int, bk: int):
+    """Pad (x, w, y) so padded K-lanes contribute the star identity.
+
+    Padding rules per circ (DESIGN/ops notes):
+      mul: pad x-lanes with 0 (GEMM) or +/-"inf" and w-lanes with 1 (semiring)
+      add: pad both with +/-"inf"/2 (sum hits the identity)
+      min/max: pad both with the star identity
+    Padded M/N rows/cols are sliced away by the caller.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    if (mp, np_, kp) == (m, n, k) and y is not None:
+        return x, w, y, (m, n)
+    if gop.is_gemm:
+        x_fill = w_fill = 0.0
+    elif gop.circ is Op.MUL:
+        x_fill = _finite_identity(gop.star, x.dtype)
+        w_fill = 1.0
+    elif gop.circ is Op.ADD:
+        ident = _finite_identity(gop.star, x.dtype)
+        x_fill, w_fill = ident / 2, ident / 2
+    else:  # circ in {MIN, MAX}: identity is absorbing for the map too
+        x_fill = _finite_identity(gop.star, x.dtype)
+        w_fill = _finite_identity(gop.star, w.dtype)
+
+    x = jnp.pad(x, ((0, mp - m), (0, kp - k)), constant_values=x_fill)
+    w = jnp.pad(w, ((0, kp - k), (0, np_ - n)), constant_values=w_fill)
+    if y is not None:
+        y_fill = _finite_identity(gop.star, y.dtype) if not gop.is_gemm else 0.0
+        y = jnp.pad(y, ((0, mp - m), (0, np_ - n)), constant_values=y_fill)
+    return x, w, y, (m, n)
+
+
+def _xla_gemm_op(x, w, y, gop: GemmOp, policy: PrecisionPolicy, k_chunk: int = 512):
+    """Scalable XLA path: scan over K-chunks, never materializing (M, K, N)."""
+    cast = policy.cast_in_fwd
+    xc, wc = cast(x), cast(w)
+    if gop.is_gemm:
+        z = jnp.matmul(xc, wc, preferred_element_type=policy.acc)
+        if y is not None:
+            z = z + y.astype(policy.acc)
+        return policy.cast_out(z)
+
+    m, k = xc.shape
+    _, n = wc.shape
+    circ = semiring.op_fn(gop.circ)
+    star = semiring.op_fn(gop.star)
+    kc = min(k_chunk, k)
+    kp = _ceil_to(k, kc)
+    if kp != k:
+        ident = _finite_identity(gop.star, policy.compute)
+        if gop.circ is Op.MUL:
+            xpad, wpad = ident, 1.0
+        elif gop.circ is Op.ADD:
+            xpad = wpad = ident / 2
+        else:
+            xpad = wpad = ident
+        xc = jnp.pad(xc, ((0, 0), (0, kp - k)), constant_values=xpad)
+        wc = jnp.pad(wc, ((0, kp - k), (0, 0)), constant_values=wpad)
+    xs = xc.reshape(m, kp // kc, kc).transpose(1, 0, 2)  # (S, M, kc)
+    ws = wc.reshape(kp // kc, kc, n)  # (S, kc, N)
+
+    ident = semiring.reduce_identity(gop.star)
+    init = jnp.full((m, n), ident, policy.acc)
+
+    def step(acc, xw):
+        xi, wi = xw
+        prod = circ(xi[:, :, None], wi[None, :, :]).astype(policy.acc)
+        red = _reduce(gop.star, prod)
+        return star(acc, red), None
+
+    z, _ = jax.lax.scan(step, init, (xs, ws))
+    if y is not None:
+        z = star(y.astype(policy.acc), z)
+    return policy.cast_out(z)
+
+
+def _reduce(op: Op, prod):
+    if op is Op.ADD:
+        return jnp.sum(prod, axis=1)
+    if op is Op.MIN:
+        return jnp.min(prod, axis=1)
+    return jnp.max(prod, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "gop",
+        "policy",
+        "block_m",
+        "block_n",
+        "block_k",
+        "backend",
+    ),
+)
+def gemm_op(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    y: jnp.ndarray | None = None,
+    *,
+    gop: GemmOp = semiring.MATMUL,
+    policy: PrecisionPolicy = FP32_REF,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    backend: str = "xla",  # xla | pallas | pallas_interpret
+) -> jnp.ndarray:
+    """Public GEMM-Op entry point: Z = star(Y, star_k(circ(X, W)))."""
+    if backend == "xla":
+        return _xla_gemm_op(x, w, y, gop, policy)
+
+    interpret = backend == "pallas_interpret"
+    m, kdim = x.shape
+    _, n = w.shape
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    bk = min(block_k, _ceil_to(kdim, 8))
+    # Quantize operands to the storage grid before padding so pad values are
+    # exactly representable and the kernel sees true storage dtypes.
+    xs = x.astype(policy.storage_fwd)
+    ws = w.astype(policy.storage_fwd)
+    ys = None if y is None else y.astype(policy.out)
+    xs, ws, ys, (mo, no) = _pad_operands(xs, ws, ys, gop, bm, bn, bk)
+    z = redmule_gemm_pallas(
+        xs,
+        ws,
+        ys,
+        gop=gop,
+        policy=policy,
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=interpret,
+    )
+    return z[:mo, :no]
+
+
+def matmul(x, w, y=None, *, policy=FP32_REF, backend="xla", **kw):
+    return gemm_op(x, w, y, gop=semiring.MATMUL, policy=policy, backend=backend, **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, softcap=None, block_q=128,
+                    block_k=128, backend="pallas_interpret"):
+    """Fused attention entry point. q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd).
+
+    GQA is expanded here (KV heads repeated per group); ragged Sq/Sk are
+    padded to block multiples and masked inside the kernel.
+    """
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, sk, hd)
+    bq, bk = min(block_q, _ceil_to(sq, 8)), min(block_k, _ceil_to(sk, 8))
+    sqp, skp = _ceil_to(sq, bq), _ceil_to(sk, bk)
+    if sqp != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sqp - sq), (0, 0)))
+    if skp != sk:
+        kf = jnp.pad(kf, ((0, 0), (0, skp - sk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skp - sk), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, softcap=softcap, block_q=bq, block_k=bk,
+        true_seq_q=sq, true_seq_k=sk,
+        interpret=backend == "pallas_interpret",
+    )
+    out = out[:, :sq].reshape(b, hq, sq, hd).transpose(0, 2, 1, 3)
+    return out

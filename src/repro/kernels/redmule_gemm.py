@@ -1,0 +1,156 @@
+"""RedMulE GEMM-Op Pallas kernel (TPU target, interpret-mode validated).
+
+TPU mapping of the paper's datapath (DESIGN.md Sec. 2):
+
+  - The L x H CE array with P pipeline registers becomes a (block_m, block_n)
+    VMEM output tile; the Z-buffer feedback/accumulate loop becomes the K grid
+    dimension accumulating into a VMEM scratch buffer.
+  - The Streamer's cast units become in-kernel ``astype`` on load/store, so
+    fp8 operands cross HBM at 1 byte/elem and are widened only inside VMEM.
+  - The (mul, add) GEMM path issues ``dot_general`` (MXU). The semiring
+    GEMM-Ops have no MXU mapping (the MXU is a hard-wired multiply-add
+    systolic array) and lower to VPU ops: chunked outer-product broadcasts
+    combined with the star operator. This is the honest TPU analogue of the
+    paper's FNCOMP CE stage.
+
+Grid: (M/bm, N/bn, K/bk), K innermost. The accumulator initializes from Y
+(the GEMM-Op bias matrix) when present — valid because ``star`` is
+associative and commutative, so folding Y in first equals combining it last.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import semiring
+from repro.core.precision import PrecisionPolicy
+from repro.core.semiring import GemmOp
+
+# VPU-path chunk of the K dimension materialized per broadcast step:
+# (block_m, _K_CHUNK, block_n) must fit VMEM alongside the operands.
+_K_CHUNK = 8
+
+
+def _star_reduce(op: semiring.Op, x, axis):
+    if op is semiring.Op.ADD:
+        return jnp.sum(x, axis=axis)
+    if op is semiring.Op.MIN:
+        return jnp.min(x, axis=axis)
+    if op is semiring.Op.MAX:
+        return jnp.max(x, axis=axis)
+    raise ValueError(op)
+
+
+def _kernel(
+    x_ref,
+    w_ref,
+    y_ref,  # may be None (compile-time)
+    o_ref,
+    acc_ref,
+    *,
+    gop: GemmOp,
+    nk: int,
+    compute_dtype,
+    acc_dtype,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if y_ref is not None:
+            acc_ref[...] = y_ref[...].astype(acc_dtype)
+        else:
+            ident = semiring.reduce_identity(gop.star)
+            acc_ref[...] = jnp.full(acc_ref.shape, ident, acc_dtype)
+
+    # Input cast unit: storage (possibly fp8) -> CE datapath format.
+    x = x_ref[...].astype(compute_dtype)
+    w = w_ref[...].astype(compute_dtype)
+
+    if gop.is_gemm:
+        acc_ref[...] += jax.lax.dot_general(
+            x,
+            w,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+    else:
+        circ = semiring.op_fn(gop.circ)
+        star = functools.partial(_star_reduce, gop.star)
+        star2 = semiring.op_fn(gop.star)
+        acc = acc_ref[...]
+        bk = x.shape[1]
+        for i in range(0, bk, _K_CHUNK):
+            xs = x[:, i : i + _K_CHUNK]  # (bm, c)
+            ws = w[i : i + _K_CHUNK, :]  # (c, bn)
+            prod = circ(xs[:, :, None], ws[None, :, :]).astype(acc_dtype)
+            acc = star2(acc, star(prod, axis=1))
+        acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        # Output cast unit: accumulator -> storage format.
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def redmule_gemm_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    y: jnp.ndarray | None,
+    *,
+    gop: GemmOp,
+    policy: PrecisionPolicy,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled GEMM-Op. Shapes must already be padded to block multiples.
+
+    x: (M, K) and w: (K, N) in a storage dtype (fp8/fp16/bf16/fp32);
+    y: optional (M, N). Returns (M, N) in ``policy.out``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k),
+        (block_m, block_n, block_k),
+    )
+    nk = k // block_k
+    grid = (m // block_m, n // block_n, nk)
+
+    kernel = functools.partial(
+        _kernel,
+        gop=gop,
+        nk=nk,
+        compute_dtype=policy.compute,
+        acc_dtype=policy.acc,
+    )
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x, w]
+    if y is not None:
+        in_specs.append(pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)))
+        operands.append(y)
+        body = kernel
+    else:
+        body = lambda x_ref, w_ref, o_ref, acc_ref: kernel(  # noqa: E731
+            x_ref, w_ref, None, o_ref, acc_ref
+        )
+
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), policy.out),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), policy.acc)],
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the RedMulE GEMM-Op engine.
+
+Semantics (paper Eq. 1 + Table 1, with the CE feedback path of Fig. 6):
+
+    Z[m, n] = star( Y[m, n], star_k( circ(X[m, k], W[k, n]) ) )
+
+The oracle materializes the full (M, K, N) circ-product for semiring ops, so
+it is only meant for test-sized inputs. Dtype handling mirrors the hardware:
+operands pass the input cast unit (storage -> compute), the reduction runs in
+the accumulator format, and the result passes the output cast unit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring
+from repro.core.precision import FP32_REF, PrecisionPolicy
+from repro.core.semiring import GemmOp, Op
+
+
+def gemm_op_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    y: jnp.ndarray | None,
+    gop: GemmOp = semiring.MATMUL,
+    policy: PrecisionPolicy = FP32_REF,
+    backward: bool = False,
+) -> jnp.ndarray:
+    """Reference GEMM-Op. x: (M, K), w: (K, N), y: (M, N) or None."""
+    assert x.ndim == 2 and w.ndim == 2, (x.shape, w.shape)
+    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+
+    cast_in = policy.cast_in_bwd if backward else policy.cast_in_fwd
+    xc = cast_in(x)  # compute dtype: the CE datapath format
+    wc = cast_in(w)
+
+    if gop.is_gemm:
+        z = jnp.matmul(xc, wc, preferred_element_type=policy.acc)
+        if y is not None:
+            z = z + y.astype(policy.acc)
+        return policy.cast_out(z)
+
+    circ = semiring.op_fn(gop.circ)
+    # (M, K, N) map product in the compute dtype (first CE stage), then
+    # star-reduce over K in the accumulator format (second stage + feedback).
+    prod = circ(xc[:, :, None], wc[None, :, :]).astype(policy.acc)
+    if gop.star is Op.ADD:
+        z = jnp.sum(prod, axis=1)
+    elif gop.star is Op.MIN:
+        z = jnp.min(prod, axis=1)
+    elif gop.star is Op.MAX:
+        z = jnp.max(prod, axis=1)
+    else:  # pragma: no cover - Table 1 has no other star ops
+        raise ValueError(gop)
+    if y is not None:
+        z = semiring.op_fn(gop.star)(y.astype(policy.acc), z)
+    return policy.cast_out(z)
+
+
+def matmul_ref(x, w, policy: PrecisionPolicy = FP32_REF):
+    return gemm_op_ref(x, w, None, semiring.MATMUL, policy)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, softcap=None):
+    """Dense softmax attention oracle. q: (BH, Sq, d); k/v: (BH, Sk, d)."""
+    import math
+
+    sq, sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(q.shape[-1])
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Model zoo: the 10 assigned architectures on one assembler."""
+from repro.models.registry import (
+    batch_shapes,
+    build,
+    decode_input_specs,
+    make_batch,
+    train_input_specs,
+)
+from repro.models.transformer import MeshCtx, Transformer
+
+__all__ = [
+    "MeshCtx",
+    "Transformer",
+    "batch_shapes",
+    "build",
+    "decode_input_specs",
+    "make_batch",
+    "train_input_specs",
+]

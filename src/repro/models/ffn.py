@@ -1,0 +1,34 @@
+"""Feed-forward blocks (gated + plain), all GEMMs via the RedMulE engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.models import common
+
+
+def init(key, d_model: int, d_ff: int, kind: str = "swiglu", dtype=jnp.bfloat16):
+    ku, kg, kd = jax.random.split(key, 3)
+    p = {
+        "up": common.dense_init(ku, d_model, d_ff, dtype),
+        "down": common.dense_init(kd, d_ff, d_model, dtype),
+    }
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = common.dense_init(kg, d_model, d_ff, dtype)
+    return p
+
+
+def apply(params, x, kind: str, policy: PrecisionPolicy):
+    up = common.dense_apply(params["up"], x, policy)
+    if kind == "swiglu":
+        h = jax.nn.silu(common.dense_apply(params["gate"], x, policy)) * up
+    elif kind == "geglu":
+        h = common.gelu(common.dense_apply(params["gate"], x, policy)) * up
+    elif kind == "gelu":
+        h = common.gelu(up)
+    elif kind == "relu":
+        h = jax.nn.relu(up)
+    else:
+        raise ValueError(kind)
+    return common.dense_apply(params["down"], h, policy)

@@ -1,0 +1,69 @@
+"""Model construction + canonical input specs per (arch x shape) cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation) for
+every model input of a given step kind — the dry-run lowers against these.
+Modality frontends are STUBS per the brief: the VLM receives precomputed
+patch embeddings, the audio model precomputed frame embeddings, both shaped
+(B, n, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.configs.base import ModelConfig
+from repro.models.transformer import MeshCtx, Transformer
+
+
+def build(cfg: ModelConfig, mesh_ctx: MeshCtx | None = None) -> Transformer:
+    return Transformer(cfg, mesh_ctx)
+
+
+def batch_shapes(cfg: ModelConfig, shape_name: str) -> dict:
+    """Concrete shapes for one cell. Returns dict with ints, no arrays."""
+    seq, batch, kind = SHAPES[shape_name]
+    out = {"kind": kind, "batch": batch, "seq": seq}
+    if cfg.family == "audio":
+        out["dec_seq"] = max(seq // cfg.enc_dec_ratio, 1)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["vis_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "audio":
+        dec = max(seq // cfg.enc_dec_ratio, 1)
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, dec), jnp.int32)
+        specs["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Specs for serve_step: one new token + a cache of ``cache_len``."""
+    model = build(cfg)
+    cross = cache_len if cfg.is_encoder_decoder else 0
+    cache = jax.eval_shape(
+        lambda: model.init_cache(batch, cache_len, cross_len=cross)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "cache": cache,
+    }
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None) -> dict:
+    """Concrete random batch (for smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    specs = train_input_specs(cfg, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k1, s.shape, 0, cfg.vocab_size)
+        else:
+            out[name] = jax.random.normal(k2, s.shape, jnp.float32).astype(s.dtype)
+    return out

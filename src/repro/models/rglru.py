@@ -1,0 +1,109 @@
+"""RecurrentGemma's RG-LRU recurrent block (Griffin; arXiv:2402.19427).
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+h_t = a_t * h_{t-1} + b_t (parallel over sequence — the SP-friendly form);
+decode carries (h, conv_state) with O(1) memory, which is what makes the
+long_500k shape tractable for this family. Projections go through RedMulE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.models import common
+
+_C = 8.0  # Griffin's recurrence-gate exponent
+_CONV_W = 4
+
+
+class RGLRUConfig(NamedTuple):
+    d_model: int
+    d_rnn: int
+
+
+def init(key, cfg: RGLRUConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 7)
+    d, r = cfg.d_model, cfg.d_rnn
+    return {
+        "in_x": common.dense_init(ks[0], d, r, dtype),
+        "in_gate": common.dense_init(ks[1], d, r, dtype),
+        "conv_w": (jax.random.normal(ks[2], (_CONV_W, r), jnp.float32) * 0.1).astype(dtype),
+        "gate_a": common.dense_init(ks[3], r, r, dtype),
+        "gate_x": common.dense_init(ks[4], r, r, dtype),
+        # Lambda parametrizes log a = -C * softplus(lam) * sigmoid(gate_a x).
+        "lam": jnp.linspace(0.5, 4.0, r, dtype=jnp.float32),
+        "out": common.dense_init(ks[5], r, d, dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width 4. x: (B, S, R); state: (B, 3, R)."""
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(_CONV_W)
+    )
+    new_state = xp[:, -( _CONV_W - 1):, :]
+    return y, new_state
+
+
+def _gates(params, xr, policy):
+    """(a_t, gated input) for the linear recurrence, computed in fp32."""
+    rgate = jax.nn.sigmoid(
+        common.dense_apply(params["gate_a"], xr, policy).astype(jnp.float32)
+    )
+    igate = jax.nn.sigmoid(
+        common.dense_apply(params["gate_x"], xr, policy).astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"]) * rgate  # (B, S, R)
+    a = jnp.exp(log_a)
+    # multiplier keeps the state norm bounded: sqrt(1 - a^2)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = mult * igate * xr.astype(jnp.float32)
+    return a, b
+
+
+def apply_scan(params, x, cfg: RGLRUConfig, policy: PrecisionPolicy):
+    """Training/prefill path: parallel associative scan over time.
+
+    Returns (y, final_state) so prefill reuses the training path.
+    """
+    gate = common.gelu(common.dense_apply(params["in_gate"], x, policy))
+    xr_raw = common.dense_apply(params["in_x"], x, policy)
+    xr, conv_state = _causal_conv(xr_raw, params["conv_w"])
+    a, b = _gates(params, xr, policy)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype)) * gate
+    out = common.dense_apply(params["out"], y, policy)
+    state = {"h": h[:, -1], "conv": conv_state.astype(jnp.bfloat16)}
+    return out, state
+
+
+def apply_decode(params, x, state, cfg: RGLRUConfig, policy: PrecisionPolicy):
+    """Single-step decode. x: (B, 1, D); state: {"h": (B,R) f32, "conv": (B,3,R)}."""
+    gate = common.gelu(common.dense_apply(params["in_gate"], x, policy))
+    xr = common.dense_apply(params["in_x"], x, policy)
+    xr, conv_state = _causal_conv(xr, params["conv_w"], state["conv"])
+    a, b = _gates(params, xr, policy)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = common.dense_apply(params["out"], y, policy)
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def init_state(batch: int, cfg: RGLRUConfig):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, cfg.d_rnn), jnp.bfloat16),
+    }

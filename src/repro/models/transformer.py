@@ -1,0 +1,476 @@
+"""Architecture assembler: every assigned config becomes one of these.
+
+Layers repeat in ``cfg.block_pattern`` units; repeated units are stacked and
+executed with ``jax.lax.scan`` (keeps HLO size and compile time independent
+of depth — essential for the 512-device dry-run of 80-layer models), with
+optional per-unit activation rematerialization. Remainder layers
+(n_layers % len(pattern)) are instantiated unstacked.
+
+Supports: decoder-only LM (dense/MoE), VLM (stub patch-embedding prefix),
+encoder-decoder (stub audio frames), recurrent/hybrid families; training
+forward, prefill, and single-token decode with per-kind caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionPolicy, as_dtype, get_policy
+from repro.models import attention, common, ffn, moe, rglru, xlstm
+from repro.models.attention import AttnConfig
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Distribution context handed to layers that need explicit collectives."""
+
+    mesh: Any = None
+    dp_axes: Any = None  # batch-sharding axes, e.g. ("pod", "data")
+    ep_axis: str | None = None  # expert-parallel axis, e.g. "model"
+    # Tensor-parallel axis; None = FSDP mode (the whole mesh is data-parallel,
+    # parameters are fully sharded and gathered per use).
+    tp_axis: str | None = "model"
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+
+def _dp_size(mc: MeshCtx) -> int:
+    if mc.mesh is None or not mc.dp_axes:
+        return 1
+    n = 1
+    for a in mc.dp_axes:
+        n *= mc.mesh.shape[a]
+    return n
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig, mesh_ctx: MeshCtx | None = None):
+        self.cfg = cfg
+        self.policy: PrecisionPolicy = get_policy(cfg.policy)
+        self.mesh_ctx = mesh_ctx or MeshCtx()
+        # fp8 parameter storage (paper: fp8 across "memory", 16-bit compute).
+        self.dtype = jnp.float8_e4m3fn if cfg.fp8_params else self.policy.compute
+        self.kv_dtype = as_dtype(cfg.kv_cache_dtype)
+        self.pattern = tuple(cfg.block_pattern)
+        self.n_units, self.n_rem = divmod(cfg.n_layers, len(self.pattern))
+        self.embed_scale = (
+            math.sqrt(cfg.d_model) if "gemma" in cfg.name else 1.0
+        )
+        self.xl_cfg = xlstm.XLSTMConfig(cfg.d_model, cfg.n_heads)
+        self.rg_cfg = rglru.RGLRUConfig(cfg.d_model, cfg.d_rnn)
+        self.moe_cfg = moe.MoEConfig(
+            cfg.n_experts, cfg.top_k, cfg.d_model, cfg.d_ff,
+            cfg.capacity_factor, cfg.moe_impl, cfg.act,
+        ) if cfg.is_moe else None
+
+    # -- distribution ------------------------------------------------------
+    def _constrain(self, x):
+        """Sequence-parallel boundary sharding (beyond-paper optimization):
+        between blocks, activations shard over ('pod','data') on batch and
+        over 'model' on the sequence dim — GSPMD inserts the Megatron-SP
+        all-gather/reduce-scatter pairs around attention/FFN. Cuts boundary
+        activation memory by the TP factor (required to fit 33B/76B train
+        cells) and replaces TP all-reduces with reduce-scatters."""
+        mc = self.mesh_ctx
+        if mc.mesh is None or x.ndim != 3:
+            return x
+        import numpy as _np
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tp = mc.tp_size
+        n_dp = int(_np.prod([mc.mesh.shape[a] for a in mc.dp_axes])) if mc.dp_axes else 1
+        b_ax = mc.dp_axes if x.shape[0] % n_dp == 0 and x.shape[0] >= n_dp else None
+        s_ax = (
+            mc.tp_axis
+            if mc.tp_axis is not None and x.shape[1] % tp == 0 and x.shape[1] >= tp
+            else None
+        )
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mc.mesh, P(b_ax, s_ax, None))
+        )
+
+    # -- attention configs -------------------------------------------------
+    def attn_cfg(self, kind: str, kv_chunk: int = 512) -> AttnConfig:
+        cfg = self.cfg
+        return AttnConfig(
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction,
+            softcap=cfg.attn_softcap,
+            window=cfg.sliding_window if kind == "attn_local" else None,
+            kv_chunk=kv_chunk,
+        )
+
+    # -- init ---------------------------------------------------------------
+    def _init_block(self, key, kind: str, cross: bool = False):
+        cfg = self.cfg
+        keys = jax.random.split(key, 6)
+        p: Params = {"norm1": common.norm_init(cfg.d_model, cfg.norm)}
+        if kind in ("attn", "attn_local"):
+            p["attn"] = attention.init(keys[0], cfg.d_model, self.attn_cfg(kind), self.dtype)
+        elif kind == "mlstm":
+            p["cell"] = xlstm.mlstm_init(keys[0], self.xl_cfg, self.dtype)
+        elif kind == "slstm":
+            p["cell"] = xlstm.slstm_init(keys[0], self.xl_cfg, self.dtype)
+        elif kind == "rglru":
+            p["cell"] = rglru.init(keys[0], self.rg_cfg, self.dtype)
+        else:
+            raise ValueError(kind)
+        if cross:
+            p["norm_x"] = common.norm_init(cfg.d_model, cfg.norm)
+            p["cross"] = attention.init(keys[1], cfg.d_model, self.attn_cfg("attn"), self.dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = common.norm_init(cfg.d_model, cfg.norm)
+            if self.moe_cfg is not None:
+                p["moe"] = moe.init(keys[2], self.moe_cfg, self.dtype)
+            else:
+                p["ffn"] = ffn.init(keys[2], cfg.d_model, cfg.d_ff, cfg.act, self.dtype)
+        return p
+
+    def _init_stack(self, key, n_layers: int, cross: bool):
+        """(stacked units, remainder blocks) for one decoder/encoder stack."""
+        n_units, n_rem = divmod(n_layers, len(self.pattern))
+        ku, kr = jax.random.split(key)
+
+        def init_unit(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return {
+                f"b{j}": self._init_block(ks[j], kind, cross)
+                for j, kind in enumerate(self.pattern)
+            }
+
+        units = jax.vmap(init_unit)(jax.random.split(ku, n_units))
+        rem = {
+            f"r{i}": self._init_block(k, self.pattern[i], cross)
+            for i, k in enumerate(jax.random.split(kr, max(n_rem, 1))[:n_rem])
+        }
+        return {"units": units, "rem": rem}
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "embed": common.embed_init(keys[0], cfg.vocab_size, cfg.d_model, self.dtype),
+            "decoder": self._init_stack(keys[1], cfg.n_layers, cfg.is_encoder_decoder),
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = common.dense_init(keys[2], cfg.d_model, cfg.vocab_size, self.dtype)
+        if cfg.family == "vlm":
+            p["vis_proj"] = common.dense_init(keys[3], cfg.d_model, cfg.d_model, self.dtype)
+        if cfg.is_encoder_decoder:
+            # Encoder: same dims, bidirectional attention blocks, no cross.
+            enc = Transformer(
+                dataclasses.replace(
+                    cfg, n_layers=cfg.n_encoder_layers, n_encoder_layers=0,
+                    block_pattern=("attn",),
+                ),
+                self.mesh_ctx,
+            )
+            p["encoder"] = enc._init_stack(keys[4], cfg.n_encoder_layers, False)
+            p["enc_final_norm"] = common.norm_init(cfg.d_model, cfg.norm)
+            p["enc_proj"] = common.dense_init(keys[5], cfg.d_model, cfg.d_model, self.dtype)
+        return p
+
+    # -- block application ---------------------------------------------------
+    def _apply_block(
+        self, kind, p, x, positions, *, cache=None, enc_out=None, enc_pos=None,
+        causal=True, decode=False,
+    ):
+        cfg = self.cfg
+        new_cache = {} if cache is not None else None
+        h = common.norm_apply(p["norm1"], x, cfg.norm)
+        if kind in ("attn", "attn_local"):
+            acfg = self.attn_cfg(kind)
+            h, ac = attention.apply(
+                p["attn"], h, positions, acfg, self.policy,
+                cache=None if cache is None else cache["attn"],
+                causal=causal, mesh_ctx=self.mesh_ctx,
+            )
+            if new_cache is not None:
+                new_cache["attn"] = ac
+        elif kind == "mlstm":
+            if decode:
+                h, st = xlstm.mlstm_decode(p["cell"], h, cache["state"], self.xl_cfg, self.policy)
+            else:
+                h, st = xlstm.mlstm_apply(p["cell"], h, self.xl_cfg, self.policy)
+            if new_cache is not None:
+                new_cache["state"] = st
+        elif kind == "slstm":
+            if decode:
+                h, st = xlstm.slstm_decode(p["cell"], h, cache["state"], self.xl_cfg, self.policy)
+            else:
+                h, st = xlstm.slstm_apply(p["cell"], h, self.xl_cfg, self.policy)
+            if new_cache is not None:
+                new_cache["state"] = st
+        elif kind == "rglru":
+            if decode:
+                h, st = rglru.apply_decode(p["cell"], h, cache["state"], self.rg_cfg, self.policy)
+            else:
+                h, st = rglru.apply_scan(p["cell"], h, self.rg_cfg, self.policy)
+            if new_cache is not None:
+                new_cache["state"] = st
+        x = x + h
+        if "cross" in p:
+            hx = common.norm_apply(p["norm_x"], x, cfg.norm)
+            if enc_out is None:
+                # decode: use the cross-KV cached at prefill time
+                ck = cache["cross_k"].astype(self.policy.compute)
+                cv = cache["cross_v"].astype(self.policy.compute)
+                cp = enc_pos
+                new_cache["cross_k"] = cache["cross_k"]
+                new_cache["cross_v"] = cache["cross_v"]
+            else:
+                acfg = self.attn_cfg("attn")
+                ck = common.dense_apply(p["cross"]["k"], enc_out, self.policy)
+                cv = common.dense_apply(p["cross"]["v"], enc_out, self.policy)
+                b, se, _ = enc_out.shape
+                ck = ck.reshape(b, se, acfg.n_kv_heads, acfg.head_dim)
+                cv = cv.reshape(b, se, acfg.n_kv_heads, acfg.head_dim)
+                cp = enc_pos
+                if new_cache is not None:
+                    new_cache["cross_k"] = ck.astype(self.kv_dtype)
+                    new_cache["cross_v"] = cv.astype(self.kv_dtype)
+                ck = ck.astype(self.policy.compute)
+                cv = cv.astype(self.policy.compute)
+            hx, _ = attention.apply(
+                p["cross"], hx, positions, self.attn_cfg("attn"), self.policy,
+                cross_kv=(ck, cv, cp), mesh_ctx=self.mesh_ctx,
+            )
+            x = x + hx
+        aux = jnp.zeros((), jnp.float32)
+        if "ffn" in p or "moe" in p:
+            h2 = common.norm_apply(p["norm2"], x, cfg.norm)
+            if "moe" in p:
+                mc = self.mesh_ctx
+                h2, aux = moe.apply(
+                    p["moe"], h2, self.moe_cfg, self.policy,
+                    mesh=mc.mesh, dp_axes=mc.dp_axes, ep_axis=mc.ep_axis,
+                )
+            else:
+                h2 = ffn.apply(p["ffn"], h2, cfg.act, self.policy)
+            x = x + h2
+        return x, new_cache, aux
+
+    def _run_stack(
+        self, stack, x, positions, *, cache=None, enc_out=None, enc_pos=None,
+        causal=True, decode=False,
+    ):
+        """Scan the stacked units, then the remainder blocks."""
+        n_units = self.n_units if stack is not None else 0
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def unit_apply(x, unit_p, unit_c):
+            new_c = {} if unit_c is not None else None
+            aux_sum = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(self.pattern):
+                x, c, aux = self._apply_block(
+                    kind, unit_p[f"b{j}"], x, positions,
+                    cache=None if unit_c is None else unit_c[f"b{j}"],
+                    enc_out=enc_out, enc_pos=enc_pos, causal=causal,
+                    decode=decode,
+                )
+                if new_c is not None:
+                    new_c[f"b{j}"] = c
+                aux_sum += aux
+            return self._constrain(x), new_c, aux_sum
+
+        if n_units:
+            units_cache = cache["units"] if cache is not None else None
+
+            if units_cache is None:
+                def body(carry, p):
+                    x, aux_acc = carry
+                    x, _, aux = unit_apply(x, p, None)
+                    return (x, aux_acc + aux), None
+                xs = stack["units"]
+            else:
+                def body(carry, xs_):
+                    x, aux_acc = carry
+                    p, c = xs_
+                    x, new_c, aux = unit_apply(x, p, c)
+                    return (x, aux_acc + aux), new_c
+                xs = (stack["units"], units_cache)
+
+            if self.cfg.remat == "block":
+                body = jax.checkpoint(body)
+            (x, aux_total), new_units_cache = jax.lax.scan(body, (x, aux_total), xs)
+        else:
+            new_units_cache = cache["units"] if cache is not None else None
+
+        new_rem = {}
+        for i in range(len(stack["rem"])):
+            kind = self.pattern[i % len(self.pattern)]
+            x, c, aux = self._apply_block(
+                kind, stack["rem"][f"r{i}"], x, positions,
+                cache=None if cache is None else cache["rem"][f"r{i}"],
+                enc_out=enc_out, enc_pos=enc_pos, causal=causal, decode=decode,
+            )
+            aux_total += aux
+            new_rem[f"r{i}"] = c
+        new_cache = None
+        if cache is not None:
+            new_cache = {"units": new_units_cache, "rem": new_rem}
+        return x, new_cache, aux_total
+
+    # -- embedding / heads ----------------------------------------------------
+    def embed(self, params, tokens):
+        x = common.embed_apply(params["embed"], tokens).astype(self.policy.compute)
+        return x * self.embed_scale
+
+    def logits(self, params, h):
+        if self.cfg.tie_embeddings:
+            out = common.unembed_apply(params["embed"], h, self.policy)
+        else:
+            out = common.dense_apply(params["head"], h, self.policy)
+        out = out.astype(jnp.float32)
+        out = common.softcap(out, self.cfg.final_softcap)
+        # Vocab-parallel logits: keep the vocab dim sharded over the TP axis
+        # so the loss reduces per-shard and only (B, c) scalars cross the
+        # wire (Megatron vocab-parallel CE) instead of full logit tensors.
+        mc = self.mesh_ctx
+        if (
+            mc.mesh is not None
+            and mc.tp_axis is not None
+            and self.cfg.vocab_size % mc.tp_size == 0
+        ):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            b_ax = mc.dp_axes if h.shape[0] % _dp_size(mc) == 0 else None
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mc.mesh, P(b_ax, None, mc.tp_axis))
+            )
+        return out
+
+    def _encode(self, params, frames):
+        """Audio encoder on stub frame embeddings (B, S_enc, d)."""
+        x = common.dense_apply(params["enc_proj"], frames.astype(self.policy.compute), self.policy)
+        pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        # Encoder stack: pattern is ("attn",) for encoders in this zoo.
+        enc = Transformer(
+            dataclasses.replace(
+                self.cfg, n_layers=self.cfg.n_encoder_layers,
+                n_encoder_layers=0, block_pattern=("attn",),
+            ),
+            self.mesh_ctx,
+        )
+        x, _, _ = enc._run_stack(params["encoder"], x, pos, causal=False)
+        return common.norm_apply(params["enc_final_norm"], x, self.cfg.norm), pos
+
+    # -- public entry points ---------------------------------------------------
+    def forward(self, params, batch):
+        """Teacher-forced forward. Returns (hidden (B,S,d), aux_loss).
+
+        batch: {"tokens": (B, S)} (+ "vis_embeds" (B,P,d) for vlm,
+        + "frames" (B,S_enc,d) for audio enc-dec).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        enc_out = enc_pos = None
+        if cfg.family == "vlm":
+            vis = common.dense_apply(
+                params["vis_proj"], batch["vis_embeds"].astype(self.policy.compute), self.policy
+            )
+            x = jnp.concatenate([vis, x], axis=1)
+        if cfg.is_encoder_decoder:
+            enc_out, enc_pos = self._encode(params, batch["frames"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = self._constrain(x)
+        x, _, aux = self._run_stack(
+            params["decoder"], x, positions, enc_out=enc_out, enc_pos=enc_pos
+        )
+        x = common.norm_apply(params["final_norm"], x, cfg.norm)
+        if cfg.family == "vlm":
+            x = x[:, batch["vis_embeds"].shape[1]:]
+        return x, aux
+
+    # -- caches -----------------------------------------------------------------
+    def _block_cache(self, kind, batch, max_len, cross_len=0):
+        c: Params = {}
+        if kind in ("attn", "attn_local"):
+            acfg = self.attn_cfg(kind)
+            alloc = min(max_len, acfg.window) if acfg.window else max_len
+            c["attn"] = attention.init_cache(batch, alloc, acfg, self.kv_dtype)
+        elif kind == "mlstm":
+            c["state"] = xlstm.mlstm_init_state(batch, self.xl_cfg)
+        elif kind == "slstm":
+            c["state"] = xlstm.slstm_init_state(batch, self.xl_cfg)
+        elif kind == "rglru":
+            c["state"] = rglru.init_state(batch, self.rg_cfg)
+        if cross_len:
+            acfg = self.attn_cfg("attn")
+            c["cross_k"] = jnp.zeros(
+                (batch, cross_len, acfg.n_kv_heads, acfg.head_dim), self.kv_dtype
+            )
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+
+    def init_cache(self, batch: int, max_len: int, cross_len: int = 0):
+        def unit_cache(_):
+            return {
+                f"b{j}": self._block_cache(kind, batch, max_len, cross_len)
+                for j, kind in enumerate(self.pattern)
+            }
+
+        units = jax.vmap(unit_cache)(jnp.arange(self.n_units)) if self.n_units else None
+        rem = {
+            f"r{i}": self._block_cache(
+                self.pattern[i % len(self.pattern)], batch, max_len, cross_len
+            )
+            for i in range(self.n_rem)
+        }
+        return {"pos": jnp.zeros((), jnp.int32), "units": units, "rem": rem,
+                "enc_pos": jnp.arange(max(cross_len, 1), dtype=jnp.int32)}
+
+    def prefill(self, params, batch, cache):
+        """Run the prompt through the decoder, filling caches."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        enc_out = enc_pos = None
+        if cfg.family == "vlm":
+            vis = common.dense_apply(
+                params["vis_proj"], batch["vis_embeds"].astype(self.policy.compute), self.policy
+            )
+            x = jnp.concatenate([vis, x], axis=1)
+        if cfg.is_encoder_decoder:
+            enc_out, enc_pos = self._encode(params, batch["frames"])
+        positions = cache["pos"] + jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, new_cache, _ = self._run_stack(
+            params["decoder"], x, positions, cache=cache,
+            enc_out=enc_out, enc_pos=enc_pos,
+        )
+        x = common.norm_apply(params["final_norm"], x, cfg.norm)
+        logits = self.logits(params, x[:, -1:])
+        new_cache["pos"] = cache["pos"] + x.shape[1]
+        new_cache["enc_pos"] = cache["enc_pos"]
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache):
+        """One-token decode. tokens: (B, 1)."""
+        x = self.embed(params, tokens)
+        positions = cache["pos"] + jnp.arange(1, dtype=jnp.int32)
+        x, new_cache, _ = self._run_stack(
+            params["decoder"], x, positions, cache=cache, decode=True,
+            enc_pos=cache.get("enc_pos"),
+        )
+        x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
+        logits = self.logits(params, x)
+        new_cache["pos"] = cache["pos"] + 1
+        new_cache["enc_pos"] = cache["enc_pos"]
+        return logits, new_cache

@@ -1,0 +1,242 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan). arXiv:2405.04517.
+
+Cell math is the paper's stabilized exponential-gating formulation. Block
+wiring is simplified to pre-norm residual cells with fused projections (the
+xLSTM paper's up/down projection sandwich is folded into the cell's in/out
+projections; documented in DESIGN.md). All projections go through RedMulE.
+
+mLSTM decode state is O(hd^2) per head — independent of context length —
+which is why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.redmule import mp_matmul
+from repro.models import common
+
+_CHUNK = 256
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "qkv": common.dense_init(ks[0], d, 3 * d, dtype),
+        "ifg": common.dense_init(ks[1], d, 2 * cfg.n_heads, dtype, scale=0.02),
+        "ogate": common.dense_init(ks[2], d, d, dtype),
+        "out": common.dense_init(ks[3], d, d, dtype),
+    }
+
+
+def _mlstm_heads(params, x, cfg: XLSTMConfig, policy):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = common.dense_apply(params["qkv"], x, policy)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3) / math.sqrt(hd)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    ifg = common.dense_apply(params["ifg"], x, policy).astype(jnp.float32)
+    log_i, f_pre = jnp.split(ifg, 2, axis=-1)  # (B,S,H) each
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f_pre)
+    return q, k, v, log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1)
+
+
+def mlstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
+    """Chunkwise-parallel mLSTM forward. x: (B, S, D).
+
+    Returns (y, final_state) — the final state is the decode cache, so
+    prefill falls out of the training path for free.
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, policy)
+
+    c = min(_CHUNK, s)
+    assert s % c == 0, (s, c)
+    n_chunks = s // c
+
+    def reshape_chunks(t):
+        return t.reshape(b, h, n_chunks, c, *t.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, t.ndim + 1)
+        )
+
+    qc, kc, vc = map(reshape_chunks, (q, k, v))  # (N,B,H,c,hd)
+    lic = log_i.reshape(b, h, n_chunks, c).transpose(2, 0, 1, 3)  # (N,B,H,c)
+    lfc = log_f.reshape(b, h, n_chunks, c).transpose(2, 0, 1, 3)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, xs):
+        C_in, n_in, m_in = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, li, lf = xs
+        F = jnp.cumsum(lf, axis=-1)  # (B,H,c) inclusive cumulative log-forget
+        # log weight of source s into target t (within chunk): F_t - F_s + li_s
+        src = li - F  # (B,H,c)
+        intra_max = jnp.max(jnp.where(tri, src[:, :, None, :], -jnp.inf), axis=-1)
+        m_t = jnp.maximum(F + m_in[..., None], F + intra_max)  # (B,H,c)
+        # inter-chunk: q_t . C_in, scaled by exp(F_t + m_in - m_t)
+        w_inter = jnp.exp(F + m_in[..., None] - m_t)  # (B,H,c)
+        inter = mp_matmul(qi, C_in, policy).astype(jnp.float32) * w_inter[..., None]
+        n_inter = n_in[:, :, None, :] * w_inter[..., None]
+        # intra-chunk quadratic part
+        scores = mp_matmul(qi, jnp.swapaxes(ki, -1, -2), policy).astype(jnp.float32)
+        logw = F[:, :, :, None] + src[:, :, None, :] - m_t[..., None]
+        wts = jnp.where(tri, jnp.exp(logw), 0.0) * scores
+        intra = mp_matmul(wts.astype(qi.dtype), vi, policy).astype(jnp.float32)
+        n_intra = jnp.einsum("bhts,bhsd->bhtd",
+                             jnp.where(tri, jnp.exp(logw), 0.0), ki.astype(jnp.float32))
+        n_t = n_inter + n_intra
+        qn = jnp.sum(n_t * qi.astype(jnp.float32), axis=-1)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h_t = (inter + intra) / denom[..., None]
+        # carry update to chunk end
+        F_end = F[..., -1]
+        m_out = jnp.maximum(F_end + m_in, F_end + jnp.max(src, axis=-1))
+        w_c = jnp.exp(F_end + m_in - m_out)
+        w_s = jnp.exp(F_end[..., None] - F + li - m_out[..., None])  # (B,H,c)
+        kv = jnp.einsum("bhsd,bhse->bhde", (w_s[..., None] * ki.astype(jnp.float32)),
+                        vi.astype(jnp.float32))
+        C_out = C_in * w_c[..., None, None] + kv
+        n_out = n_in * w_c[..., None] + jnp.sum(w_s[..., None] * ki.astype(jnp.float32), axis=2)
+        return (C_out, n_out, m_out), h_t
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    # hs: (N, B, H, c, hd) -> (B, S, D)
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    y = hs.reshape(b, s, d).astype(x.dtype)
+    y = y * jax.nn.sigmoid(
+        common.dense_apply(params["ogate"], x, policy).astype(jnp.float32)
+    ).astype(x.dtype)
+    out = common.dense_apply(params["out"], y, policy)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(params, x, state, cfg: XLSTMConfig, policy: PrecisionPolicy):
+    """One-step recurrence. x: (B, 1, D); state: {"C","n","m"}."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, policy)
+    q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,hd)
+    li, lf = log_i[..., 0], log_f[..., 0]  # (B,H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(li - m_new)
+    C = state["C"] * fw[..., None, None] + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = state["n"] * fw[..., None] + iw[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    qn = jnp.sum(n * q, axis=-1)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    y = (num / denom[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    y = y * jax.nn.sigmoid(
+        common.dense_apply(params["ogate"], x, policy).astype(jnp.float32)
+    ).astype(x.dtype)
+    out = common.dense_apply(params["out"], y, policy)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(batch: int, cfg: XLSTMConfig):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "wx": common.dense_init(ks[0], d, 4 * d, dtype),  # z, i, f, o pre-acts
+        # Recurrent weights: block-diagonal per head (xLSTM Sec. 2.2).
+        "r": (jax.random.normal(ks[1], (4, h, hd, hd), jnp.float32) / math.sqrt(hd)).astype(dtype),
+        "out": common.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _slstm_cell(wx_t, r, h_prev, c_prev, n_prev, m_prev, nheads, hd):
+    """One sLSTM step, fp32. wx_t: (B, 4D); h_prev: (B, H, hd)."""
+    rh = jnp.einsum("ghde,bhd->bghe", r.astype(jnp.float32), h_prev)  # (B,4,H,hd)
+    pre = wx_t.reshape(wx_t.shape[0], 4, nheads, hd).astype(jnp.float32) + rh
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = -jax.nn.softplus(-pre[:, 2])  # sigmoid gate in log space
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    iw = jnp.exp(log_i - m_new)
+    fw = jnp.exp(log_f + m_prev - m_new)
+    c = fw * c_prev + iw * z
+    n = fw * n_prev + iw
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return h_new, c, n, m_new
+
+
+def slstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
+    """Sequential sLSTM forward. Returns (y, final_state)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    wx = common.dense_apply(params["wx"], x, policy)  # (B,S,4D)
+
+    def step(carry, wx_t):
+        h_prev, c_prev, n_prev, m_prev = carry
+        h_new, c, n, m = _slstm_cell(wx_t, params["r"], h_prev, c_prev, n_prev,
+                                     m_prev, h, hd)
+        return (h_new, c, n, m), h_new
+
+    zeros = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
+                                        wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = common.dense_apply(params["out"], y, policy)
+    return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def slstm_decode(params, x, state, cfg: XLSTMConfig, policy: PrecisionPolicy):
+    h, hd = cfg.n_heads, cfg.head_dim
+    wx = common.dense_apply(params["wx"], x, policy)[:, 0]
+    h_new, c, n, m = _slstm_cell(
+        wx, params["r"], state["h"], state["c"], state["n"], state["m"], h, hd
+    )
+    y = h_new.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    out = common.dense_apply(params["out"], y, policy)
+    return out, {"h": h_new, "c": c, "n": n, "m": m}
+
+
+def slstm_init_state(batch: int, cfg: XLSTMConfig):
+    h, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}

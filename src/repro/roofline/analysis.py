@@ -1,0 +1,159 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+collective term = collective_bytes / (chips x 50 GB/s/link ICI)
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are parsed from the
+HLO text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute result is sized and weighted by the ring-traffic factor of
+its kind (all-reduce moves ~2x its payload on a ring; the others ~1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s4": 1, "u4": 1,
+}
+
+# Ring-traffic multiplier per collective kind (bytes moved per participating
+# chip relative to the payload size).
+_KIND_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective payload bytes by kind from HLO text.
+
+    Counts each logical collective once ('-done' ops are skipped; '-start'
+    carries the shape). Returns {kind: bytes, 'total': weighted_total}.
+    """
+    by_kind: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        by_kind[kind] += _shape_bytes(shape_str)
+    out = dict(by_kind)
+    out["total_weighted"] = sum(
+        b * _KIND_FACTOR[k] for k, b in by_kind.items()
+    )
+    out["total_raw"] = sum(by_kind.values())
+    return out
+
+
+# TPU v5e-class constants (per chip).
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+# 2D/3D torus: a chip drives multiple links; collectives on one mesh axis use
+# ~2 links (bidirectional ring). We charge the per-link rate (conservative).
+ICI_BW_EFFECTIVE = ICI_BW_PER_LINK
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    n_chips: int
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return dict(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            bottleneck=self.bottleneck,
+            hlo_flops=self.hlo_flops,
+            hlo_bytes=self.hlo_bytes,
+            coll_bytes=self.coll_bytes,
+            n_chips=self.n_chips,
+        )
+
+
+def roofline_from_artifacts(
+    cost: dict, hlo_text: str, n_chips: int
+) -> Roofline:
+    """hlo_text: compiled.as_text() (per-device partitioned module).
+
+    XLA's built-in cost_analysis counts while-loop bodies once, which
+    undercounts scan-over-layers models by the layer count; we use the
+    scan-aware analyzer in ``hlo_cost`` instead (validated against
+    cost_analysis on loop-free programs). All quantities are per-device
+    under SPMD, so terms divide by per-chip rates.
+    """
+    from repro.roofline import hlo_cost
+
+    c = hlo_cost.analyze(hlo_text)
+    return Roofline(
+        compute_s=c.flops / PEAK_FLOPS_BF16,
+        memory_s=c.bytes / HBM_BW,
+        collective_s=c.coll_bytes / ICI_BW_EFFECTIVE,
+        hlo_flops=c.flops,
+        hlo_bytes=c.bytes,
+        coll_bytes=c.coll_bytes,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_train(n_active_params: int, n_tokens: int) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_active_params * n_tokens
+
+
+def model_flops_decode(n_active_params: int, n_tokens: int) -> float:
+    """2*N per generated token."""
+    return 2.0 * n_active_params * n_tokens

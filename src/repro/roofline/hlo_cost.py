@@ -1,0 +1,440 @@
+"""Scan-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+ignoring the trip count — useless for scan-over-layers models (a 62-layer
+model reports ~1 layer of FLOPs). This module re-derives FLOPs, fusion-aware
+HBM bytes and collective payload bytes from the optimized HLO text,
+multiplying loop bodies by their ``known_trip_count`` backend config.
+
+Cost model:
+  - dot: 2 * result_elems * contracted_elems FLOPs; lhs+rhs+result bytes
+  - fusion: 1 FLOP/elem for each elementwise op inside; bytes = fusion
+    operands + result only (internals live in registers/VMEM — XLA semantics)
+  - while: (body + cond) * trip_count
+  - collectives: payload bytes * ring factor (all-reduce 2x, others 1x),
+    counted inside loops with multiplicity
+  - reshape/bitcast/tuple/gte/parameter/constant: free
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+
+_ELEMWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "sine", "cosine", "negate", "abs",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "atan2", "compare", "select", "clamp", "and", "or", "xor", "not",
+    "shift-left", "shift-right-arithmetic", "shift-right-logical",
+    "remainder", "erf",
+}
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "iota", "partition-id", "replica-id",
+    "rng-bit-generator", "optimization-barrier", "custom-call", "domain",
+    "get-dimension-size",
+}
+_COLLECTIVES = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0, "ragged-all-to-all": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+
+def _shape_info(shape_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) of a (possibly tuple) shape string."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: float = 0.0  # ring-weighted
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(
+            self.flops * f, self.bytes * f, self.transcendentals * f,
+            self.coll_bytes * f,
+            {k: v * f for k, v in self.coll_by_kind.items()},
+        )
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[str]] = {}
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self._chain_memo: dict[str, bool] = {}
+        self.entry = self._entry_name
+
+    @staticmethod
+    def _logical_lines(text: str):
+        """Join physical lines wrapped inside unbalanced parentheses (HLO
+        pretty-printer wraps long tuple shapes across lines)."""
+        buf = ""
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            buf = line if not buf else buf + " " + line.strip()
+            if buf.count("(") - buf.count(")") > 0:
+                continue
+            yield buf
+            buf = ""
+        if buf:
+            yield buf
+
+    def _parse(self, text: str):
+        cur = None
+        self._entry_name = None
+        for line in self._logical_lines(text):
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.lstrip().startswith("ENTRY"):
+                        self._entry_name = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            self.computations[cur].append(line)
+
+    # -- per-computation cost -------------------------------------------------
+    # Ops that fuse into elementwise chains on TPU: a maximal chain costs one
+    # read of each materialized input + one write at each chain boundary,
+    # regardless of chain length ("virtual fusion" — the CPU-backend HLO this
+    # container produces keeps each op in its own kLoop fusion, which would
+    # otherwise overcount HBM traffic ~chain-length x).
+    _CHAIN_OPS = _ELEMWISE_FLOP_OPS | {"broadcast", "convert", "iota"}
+
+    def _comp_is_chain(self, name: str) -> bool:
+        """True if a (wrapper-)fusion computation is purely elementwise."""
+        if name in self._chain_memo:
+            return self._chain_memo[name]
+        ops = []
+        for line in self.computations.get(name, ()):
+            m = _INSTR_RE.match(line)
+            if m:
+                ops.append(m.group(3))
+        real = [o for o in ops if o not in _FREE_OPS]
+        res = bool(real) and all(o in self._CHAIN_OPS for o in real)
+        self._chain_memo[name] = res
+        return res
+
+    def _effective_kind(self, op: str, rest: str) -> str:
+        if op in self._CHAIN_OPS:
+            return "chain"
+        if op == "fusion":
+            cm = _CALLS_RE.search(rest)
+            if cm and self._comp_is_chain(cm.group(1)):
+                return "chain"
+        return op
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        total = Cost()
+        shapes: dict[str, str] = {}
+        instrs = []
+        for line in self.computations.get(name, ()):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, shape_str, op, rest = m.groups()
+            shapes[iname] = shape_str
+            instrs.append((iname, shape_str, op, rest))
+
+        kinds = {
+            iname: self._effective_kind(op, rest)
+            for iname, _, op, rest in instrs
+        }
+        readers: dict[str, list] = {}
+        for iname, _, op, rest in instrs:
+            k = kinds[iname]
+            for o in self._operand_names(rest):
+                readers.setdefault(o, []).append(k)
+        # values consumed ONLY by chain ops never materialize (mid-chain)
+        only_chain = {
+            n for n, rs in readers.items() if rs and all(r == "chain" for r in rs)
+        }
+
+        for iname, shape_str, op, rest in instrs:
+            c = self._instr_cost(op, shape_str, rest, shapes)
+            if kinds[iname] == "chain" and op != "iota":
+                _, nbytes = _shape_info(shape_str)
+                # fusion-aware bytes: read materialized operands once, write
+                # only at chain boundaries.
+                reads = 0.0
+                for o in self._operand_names(rest):
+                    if kinds.get(o, "") != "chain":
+                        reads += _shape_info(shapes.get(o, ""))[1]
+                writes = 0.0 if iname in only_chain else nbytes
+                c.bytes = reads + writes
+            total += c
+        self._memo[name] = total
+        return total
+
+    def _operand_names(self, rest: str) -> list[str]:
+        # operand list is everything up to the matching ')': take %names.
+        return re.findall(r"%([\w.\-]+)", rest.split("), ")[0].split(")")[0])
+
+    def _operand_bytes_list(self, rest: str, shapes: dict) -> list[float]:
+        return [
+            _shape_info(shapes.get(o, ""))[1] for o in self._operand_names(rest)
+        ]
+
+    def _operand_bytes(self, rest: str, shapes: dict) -> float:
+        return sum(self._operand_bytes_list(rest, shapes))
+
+    def _instr_cost(self, op: str, shape_str: str, rest: str, shapes: dict) -> Cost:
+        elems, nbytes = _shape_info(shape_str)
+        c = Cost()
+        if op in _FREE_OPS:
+            return c
+        if op in ("while",):
+            body = _BODY_RE.search(rest)
+            cond = _COND_RE.search(rest)
+            trips = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trips = int(tm.group(1))
+            inner = Cost()
+            if body:
+                inner += self.comp_cost(body.group(1))
+            if cond:
+                inner += self.comp_cost(cond.group(1))
+            return inner.scaled(trips)
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(rest)
+            if bm:
+                branches = re.findall(r"%?([\w.\-]+)", bm.group(1))
+                costs = [self.comp_cost(b) for b in branches]
+                if costs:  # charge the max branch
+                    return max(costs, key=lambda x: x.flops + x.bytes)
+            return c
+        if op in ("fusion", "call", "async-start"):
+            cm = _CALLS_RE.search(rest) or _TOAPPLY_RE.search(rest)
+            if cm:
+                inner = self.comp_cost(cm.group(1))
+                # fusion internals: keep flops, drop bytes (registers); charge
+                # HBM traffic fusion-aware: operands read only through slices
+                # count slice bytes; a DUS root writes only the update region.
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll_by_kind.items():
+                    c.coll_by_kind[k] = c.coll_by_kind.get(k, 0.0) + v
+                c.bytes += self._fusion_io_bytes(
+                    cm.group(1), nbytes, self._operand_bytes_list(rest, shapes)
+                )
+            else:
+                c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                return c
+            factor = _COLLECTIVES[base]
+            c.coll_bytes += nbytes * factor
+            c.coll_by_kind[base] = c.coll_by_kind.get(base, 0.0) + nbytes
+            c.bytes += nbytes  # payload also crosses HBM
+            return c
+
+        if op == "dot":
+            # contracted size from lhs shape and lhs_contracting_dims
+            ops = re.findall(r"%([\w.\-]+)", rest)
+            lhs_shape = shapes.get(ops[0], "") if ops else ""
+            dims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            contract = 1
+            if lhs_shape and dims_m:
+                lhs_dims = [
+                    int(d)
+                    for d in _SHAPE_RE.search(lhs_shape).group(2).split(",")
+                    if d
+                ]
+                for ax in dims_m.group(1).split(","):
+                    if ax:
+                        contract *= lhs_dims[int(ax)]
+            c.flops += 2.0 * elems * contract
+            c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+        if op == "convolution":
+            # rough: 2 * out_elems * (kernel elems / out_features)
+            c.flops += 2.0 * elems  # conservative; convs are negligible here
+            c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+        if op in ("reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+            c.flops += self._operand_bytes(rest, shapes) / 4.0  # ~1 op/elem
+            c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+        if op in ("dynamic-slice", "slice", "gather"):
+            # reads only the sliced region (+negligible indices)
+            c.bytes += 2.0 * nbytes
+            return c
+        if op == "dynamic-update-slice":
+            # in-place read-modify-write of the update region only
+            obs = self._operand_bytes_list(rest, shapes)
+            upd = obs[1] if len(obs) > 1 else nbytes
+            c.bytes += 2.0 * upd
+            return c
+        if op == "scatter":
+            obs = self._operand_bytes_list(rest, shapes)
+            upd = obs[2] if len(obs) > 2 else nbytes
+            c.bytes += 3.0 * upd  # read+write target region + read updates
+            return c
+        if op in ("concatenate", "broadcast", "transpose", "copy", "convert",
+                  "pad", "reverse", "cholesky", "triangular-solve", "rng",
+                  "reduce-precision", "copy-start", "copy-done"):
+            c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+        if op in _ELEMWISE_FLOP_OPS:
+            c.flops += elems
+            if op in ("exponential", "tanh", "logistic", "log", "power",
+                      "sine", "cosine", "erf"):
+                c.transcendentals += elems
+            c.bytes += nbytes + self._operand_bytes(rest, shapes)
+            return c
+        # Unknown op: charge bytes only.
+        c.bytes += nbytes + self._operand_bytes(rest, shapes)
+        return c
+
+    def _fusion_io_bytes(self, comp: str, result_bytes: float,
+                         operand_bytes: list[float]) -> float:
+        """HBM bytes of one fusion: slice-aware reads + DUS-aware writes.
+
+        Special case: the CPU backend lowers a bf16 dynamic-update-slice as
+        convert(buffer)->f32 DUS->convert (promote-demote). On the TPU target
+        the update is native and in place, so a fusion whose non-free ops are
+        {converts/elementwise} + exactly one DUS is charged 2x update bytes.
+        """
+        lines = self.computations.get(comp, ())
+        # Map parameter order -> instruction name, collect per-instr info.
+        param_names: dict[int, str] = {}
+        instrs: list[tuple[str, str, str, str]] = []  # (name, shape, op, rest)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, shape_str, op, rest = m.groups()
+            instrs.append((iname, shape_str, op, rest))
+            if op == "parameter":
+                pidx = re.match(r"\s*(\d+)", rest)
+                if pidx:
+                    param_names[int(pidx.group(1))] = iname
+
+        # promote-demote DUS pattern (see docstring)
+        real_ops = [(n, s, o, r) for n, s, o, r in instrs if o not in _FREE_OPS]
+        dus = [t for t in real_ops if t[2] == "dynamic-update-slice"]
+        rest_chain = all(
+            o in self._CHAIN_OPS for _, _, o, _ in real_ops
+            if o != "dynamic-update-slice"
+        )
+        if len(dus) == 1 and rest_chain:
+            _, _, _, dus_rest = dus[0]
+            upd_names = self._operand_names(dus_rest)
+            upd = result_bytes
+            if len(upd_names) > 1:
+                upd_shape = next(
+                    (s for n, s, _, _ in instrs if n == upd_names[1]), ""
+                )
+                b = _shape_info(upd_shape)[1]
+                if b:
+                    upd = b
+            return 2.0 * upd
+
+        read = 0.0
+        for i, full in enumerate(operand_bytes):
+            pname = param_names.get(i)
+            if pname is None:
+                read += full
+                continue
+            consumers = [
+                (op2, shape2)
+                for (_, shape2, op2, rest2) in instrs
+                if re.search(rf"%{re.escape(pname)}\b", rest2)
+            ]
+            if consumers and all(
+                op2 in ("dynamic-slice", "slice", "gather", "dynamic-update-slice")
+                for op2, _ in consumers
+            ):
+                # sliced reads count the slice; a DUS consumer means this
+                # param is the in-place target (write side covers it).
+                read += sum(
+                    _shape_info(s2)[1]
+                    for op2, s2 in consumers
+                    if op2 != "dynamic-update-slice"
+                )
+            else:
+                read += full
+
+        write = result_bytes
+        for iname, shape_str, op, rest in instrs:
+            if op == "dynamic-update-slice":
+                # in-place: write only the update region (+read it)
+                upd_names = self._operand_names(rest)
+                if len(upd_names) > 1:
+                    upd_shape = next(
+                        (s for n, s, _, _ in instrs if n == upd_names[1]), ""
+                    )
+                    upd = _shape_info(upd_shape)[1]
+                    write = min(write, 2.0 * upd)
+        return read + write
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,66 @@
+"""Data pipeline: determinism, host sharding, resumability, learnability."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM, for_model
+
+
+def test_deterministic_addressing():
+    cfg = DataConfig(vocab_size=256, seq_len=16, global_batch=8)
+    d = SyntheticLM(cfg)
+    a = d.batch(3)
+    b = d.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_sharding_partitions_batch():
+    """Two hosts' slices are disjoint parts of the same logical batch and
+    differ from each other."""
+    kw = dict(vocab_size=256, seq_len=16, global_batch=8, seed=1)
+    h0 = SyntheticLM(DataConfig(**kw, host_index=0, host_count=2)).batch(0)
+    h1 = SyntheticLM(DataConfig(**kw, host_index=1, host_count=2)).batch(0)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_iterator_resume():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=4)
+    d = SyntheticLM(cfg)
+    it = d.iterate(start=5)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], d.batch(5)["tokens"])
+
+
+def test_family_specific_fields():
+    vlm = get_config("internvl2-76b", smoke=True)
+    b = for_model(vlm, 16, 4).batch(0)
+    assert "vis_embeds" in b and b["vis_embeds"].shape[1] == vlm.n_frontend_tokens
+    audio = get_config("seamless-m4t-large-v2", smoke=True)
+    b = for_model(audio, 16, 4).batch(0)
+    assert "frames" in b
+    assert b["tokens"].shape[1] == 16 // audio.enc_dec_ratio
+
+
+def test_tokens_in_range():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    t = SyntheticLM(cfg).batch(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 100
+
+
+def test_stream_is_learnable():
+    """Next token is strongly predicted by the previous one (by design)."""
+    cfg = DataConfig(vocab_size=50, seq_len=64, global_batch=8)
+    t = SyntheticLM(cfg).batch(0)["tokens"]
+    # For each row the map x->next is near-deterministic: measure collision
+    same = 0
+    total = 0
+    for row in t:
+        seen = {}
+        for a, b in zip(row[:-1], row[1:]):
+            if a in seen:
+                total += 1
+                same += seen[a] == b
+            seen[a] = b
+    assert total > 0 and same / total > 0.7

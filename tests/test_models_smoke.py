@@ -1,0 +1,97 @@
+"""Per-architecture smoke: reduced same-family config, one forward + one
+train step on CPU, asserting output shapes and finiteness (per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build, make_batch
+from repro.optim import AdamW
+from repro.training import TrainState, make_train_step
+
+BATCH, SEQ = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, BATCH, SEQ)
+
+    h, aux = model.forward(params, batch)
+    exp_seq = SEQ // cfg.enc_dec_ratio if cfg.is_encoder_decoder else SEQ
+    assert h.shape == (BATCH, exp_seq, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all()
+
+    logits = model.logits(params, h[:, -1:])
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+
+    opt = AdamW(lr=1e-3)
+    state = TrainState(
+        jnp.zeros((), jnp.int32), params, opt.init(params), jnp.zeros((), jnp.int32)
+    )
+    step = jax.jit(make_train_step(model, opt))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(metrics["skipped"]) == 0
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state.params, params,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "recurrentgemma-2b"])
+def test_local_attention_configs(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.sliding_window is not None
+    assert any(k == "attn_local" for k in cfg.block_pattern)
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published dims."""
+    expect = {
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (nl, dm, nh, kv, dff, vs) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (nl, dm, nh, kv, dff, vs), (arch, got)
+
+
+def test_moe_expert_counts():
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").top_k == 2
+    assert get_config("granite-moe-1b-a400m").n_experts == 32
+    assert get_config("granite-moe-1b-a400m").top_k == 8
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: init-time parameter counts are in the ballpark of the names."""
+    import math
+
+    ranges = {
+        "chatglm3-6b": (5e9, 8e9),
+        "granite-3-8b": (7e9, 10e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 45e9),
+        "internvl2-76b": (65e9, 80e9),
+    }
+    for arch, (lo, hi) in ranges.items():
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        assert lo <= n <= hi, (arch, f"{n:.3g}")

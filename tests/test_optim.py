@@ -1,0 +1,62 @@
+"""Optimizer substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamW, cosine_schedule, global_norm
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = opt.init(params)
+    target = jnp.array([1.0, 1.0, 1.0])
+    for step in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(params, g, state, jnp.asarray(step))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_clipping_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    new, _ = opt.update(params, g, state, jnp.asarray(0))
+    assert np.isfinite(np.asarray(new["w"])).all()
+    assert float(jnp.max(jnp.abs(new["w"]))) < 20.0
+
+
+def test_weight_decay_pulls_to_zero():
+    opt = AdamW(lr=0.1, weight_decay=0.5, clip_norm=None)
+    params = {"w": jnp.array([10.0])}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(1)}
+    for step in range(50):
+        params, state = opt.update(params, zero_g, state, jnp.asarray(step))
+    assert abs(float(params["w"][0])) < 10.0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    vals = [float(lr(jnp.asarray(s))) for s in range(100)]
+    assert vals[0] < vals[9] <= 1e-3 + 1e-9  # warmup rises
+    assert vals[10] >= vals[50] >= vals[99]  # cosine decays
+    assert vals[99] >= 1e-4 - 1e-9  # floor
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    want = np.sqrt(3 * 1 + 4 * 4)
+    np.testing.assert_allclose(float(global_norm(t)), want, rtol=1e-6)
+
+
+def test_master_moments_fp32_with_bf16_params():
+    opt = AdamW(lr=1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+    new, state = opt.update(params, g, state, jnp.asarray(0))
+    assert new["w"].dtype == jnp.bfloat16
+    assert float(new["w"][0]) != 1.0

@@ -1,0 +1,81 @@
+"""The analytic perf model must reproduce the paper's measured points."""
+import numpy as np
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+def test_peak_utilization_96cubed():
+    """Paper Sec 5.2.1: 99.4% CE utilization on 96x96x96 FP16."""
+    c = pm.redmule_cycles(96, 96, 96)
+    assert abs(c.utilization - 0.994) < 0.002
+
+
+def test_gflops_at_operating_points():
+    """Paper: 58.5 GFLOPS @613MHz, 44.8 @470MHz (12x4 FP16)."""
+    assert abs(pm.gflops(96, 96, 96) - 58.5) < 0.3
+    assert abs(pm.gflops(96, 96, 96, freq_hz=pm.FREQ_EFF_HZ) - 44.8) < 0.3
+
+
+def test_fp8_instance_doubles_performance():
+    """Paper: RedMulE 12x8 reaches 117 GFLOPS FP8 with the same 288b port."""
+    g = pm.gflops(96, 96, 96, pm.REDMULE_12x8_FP8)
+    assert abs(g - 117) < 1.5
+    assert pm.REDMULE_12x8_FP8.elems_per_cycle == 2 * pm.REDMULE_12x4_FP16.elems_per_cycle
+
+
+def test_energy_efficiency_table2():
+    """Table 2 energy-efficiency column (GFLOPS/W), best-efficiency point."""
+    cases = [
+        (pm.REDMULE_12x4_FP16, "gemm", 755, 25),
+        (pm.REDMULE_12x4_FP16, "g1", 842, 25),
+        (pm.REDMULE_12x4_FP16, "g2", 1193, 35),
+        (pm.REDMULE_12x8_FP8, "gemm", 920, 25),
+        (pm.REDMULE_12x8_FP8, "g2", 1666, 45),
+    ]
+    for inst, kind, want, tol in cases:
+        got = pm.gflops_per_watt(96, 96, 96, inst, kind=kind, point="eff")
+        assert abs(got - want) < tol, (kind, got, want)
+
+
+def test_speedups_vs_software():
+    """Paper: 15x avg GEMM speedup (large), 3.5x at 8^3, up to 47x/62x on
+    GEMM-Ops groups 1/2."""
+    big = pm.sw_cycles(512, 512, 512) / pm.redmule_cycles(512, 512, 512).cycles
+    assert abs(big - 15.0) < 1.0
+    small = pm.sw_cycles(8, 8, 8) / pm.redmule_cycles(8, 8, 8).cycles
+    assert abs(small - 3.5) < 0.4
+    g1 = pm.sw_cycles(512, 512, 512, "g1") / pm.redmule_cycles(512, 512, 512).cycles
+    g2 = pm.sw_cycles(512, 512, 512, "g2") / pm.redmule_cycles(512, 512, 512).cycles
+    assert abs(g1 - 47) < 3 and abs(g2 - 62) < 3
+
+
+def test_leftover_performance_steps():
+    """Fig 11: performance rises with M until L, then steps at multiples."""
+    g = [pm.gflops(m, 96, 96, freq_hz=pm.FREQ_EFF_HZ) for m in range(1, 25)]
+    assert g[0] < 6.0  # M=1 heavily underutilized (paper: 4.7 GOPS)
+    assert g[11] > 40.0  # M=12 fills the rows
+    # step boundary: M=13 utilization drops vs M=12
+    assert g[12] < g[11]
+
+
+def test_clock_gating_saves_up_to_37pc():
+    f_full = pm.clock_gating_power_factor(96, 96, 96)
+    assert f_full > 0.95  # fully utilized: nothing to gate
+    f_row = pm.clock_gating_power_factor(1, 96, 96)
+    assert 0.75 <= f_row <= 0.85  # ~22% row-gating saving (paper)
+    f_both = pm.clock_gating_power_factor(1, 3, 3)
+    assert f_both >= 1 - 0.375  # bounded by the paper's 37%
+
+
+def test_tile_math_matches_paper_description():
+    """Each tile is L rows x H*(P+1) cols; 12x4xP3 -> 16 pipeline stages."""
+    inst = pm.REDMULE_12x4_FP16
+    assert inst.tile_cols == 16
+    assert pm.REDMULE_12x8_FP8.tile_cols == 32  # fp8: 32 stages (Sec 5.2.3)
+
+
+def test_roofline_seconds_helper():
+    r = pm.roofline_seconds(1e15, 1e12, 1e10, n_chips=256)
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert r["compute_s"] > 0

@@ -1,0 +1,129 @@
+"""Hybrid-FP8 training rule + the paper's Fig. 10 error-analysis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import redmule
+from repro.core.precision import (
+    E4M3,
+    E5M2,
+    FP32_REF,
+    REDMULE_FP16,
+    REDMULE_HFP8,
+    REDMULE_HFP8_OUT8,
+    get_policy,
+)
+
+
+def _on_grid(x, dtype):
+    return np.array_equal(
+        np.asarray(x, np.float32),
+        np.asarray(np.asarray(x).astype(dtype).astype(np.float32)),
+    )
+
+
+def test_forward_operands_on_e4m3_grid(rng):
+    """Forward GEMM must consume E4M3-quantized operands (paper 4.2.3)."""
+    pol = REDMULE_HFP8
+    a = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+    z = redmule.mp_matmul(a, b, pol)
+    aq = a.astype(pol.compute).astype(E4M3).astype(jnp.float32)
+    bq = b.astype(pol.compute).astype(E4M3).astype(jnp.float32)
+    want = (aq @ bq).astype(pol.out)
+    np.testing.assert_allclose(
+        np.asarray(z, np.float32), np.asarray(want, np.float32), rtol=2e-3
+    )
+
+
+def test_backward_grads_on_e5m2_grid(rng):
+    """Backward GEMMs consume the E5M2-quantized cotangent."""
+    pol = REDMULE_HFP8
+    a = jnp.asarray(rng.standard_normal((6, 10)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((10, 7)).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal((6, 7)).astype(np.float32))
+
+    da = jax.grad(lambda a_: jnp.sum(redmule.mp_matmul(a_, b, pol) * g))(a)
+    gq = g.astype(pol.compute).astype(E5M2).astype(jnp.float32)
+    bq = b.astype(pol.compute).astype(E4M3).astype(jnp.float32)
+    want = gq @ bq.T
+    np.testing.assert_allclose(
+        np.asarray(da, np.float32), want, rtol=2e-2, atol=2e-2
+    )
+
+
+def test_fp16_policy_grads_flow(rng):
+    pol = REDMULE_FP16
+    a = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
+    da, db = jax.grad(
+        lambda a_, b_: jnp.sum(redmule.mp_matmul(a_, b_, pol) ** 2), argnums=(0, 1)
+    )(a, b)
+    assert np.isfinite(np.asarray(da, np.float32)).all()
+    assert np.isfinite(np.asarray(db, np.float32)).all()
+
+
+def test_broadcast_batched_matmul_grads(rng):
+    """Attention-style (B,H,S,d) @ (d,S) broadcast grads reduce correctly."""
+    pol = REDMULE_FP16
+    a = jnp.asarray(rng.standard_normal((2, 3, 4, 5)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((5, 6)).astype(np.float32))
+    db = jax.grad(lambda b_: jnp.sum(redmule.mp_matmul(a, b_, pol)))(b)
+    assert db.shape == b.shape
+    # fp32 oracle
+    db_ref = jax.grad(lambda b_: jnp.sum(jnp.matmul(a, b_)))(b)
+    np.testing.assert_allclose(
+        np.asarray(db, np.float32), np.asarray(db_ref), rtol=3e-2, atol=3e-1
+    )
+
+
+# --- Fig. 10 reproduction invariants ---------------------------------------
+
+
+def _rmse_for(policy, n, rng):
+    """Engine-vs-exact RMSE with inputs already on the policy's storage grid
+    (the paper measures the computation pipeline's error, not the input
+    representation error — otherwise 8-in/16-out could not be 'negligible')."""
+    x = jnp.asarray(rng.standard_normal((32, n)).astype(np.float32) / np.sqrt(n))
+    w = jnp.asarray(rng.standard_normal((n, 32)).astype(np.float32))
+    xq = x.astype(policy.storage_fwd).astype(jnp.float32)
+    wq = w.astype(policy.storage_fwd).astype(jnp.float32)
+    exact = np.asarray(jnp.matmul(xq, wq))
+    got = np.asarray(redmule.mp_matmul(xq, wq, policy), np.float32)
+    return float(np.sqrt(np.mean((exact - got) ** 2)))
+
+
+def test_fig10_fp8_out_much_worse_than_fp16_out(rng):
+    """Paper: all-8-bit RMSE is >100x the 16-bit case; 8-bit in/16-bit out is
+    comparable to 16-bit only. (We assert the ordering and a >10x gap, which
+    is the architectural claim; the exact 100x depends on N.)"""
+    n = 512
+    r16 = _rmse_for(REDMULE_FP16, n, rng)
+    r8_16 = _rmse_for(REDMULE_HFP8, n, rng)
+    r8_8 = _rmse_for(REDMULE_HFP8_OUT8, n, rng)
+    assert r8_8 > 10 * r16, (r8_8, r16)
+    assert r8_16 < 10 * r16 + 1e-3, (r8_16, r16)
+    assert r8_16 < r8_8
+
+
+def test_policy_registry():
+    for name in ("redmule_fp16", "redmule_hfp8", "tpu_bf16", "fp32"):
+        p = get_policy(name)
+        assert p.name == name
+    with pytest.raises(KeyError):
+        get_policy("nope")
+
+
+def test_fp8_residual_storage(rng):
+    """With fp8 policies, saved residuals are stored in 1-byte dtypes."""
+    pol = REDMULE_HFP8
+    a = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
+    _, vjp = jax.vjp(
+        lambda a_, b_: redmule._mp_core(a_.astype(pol.compute),
+                                        b_.astype(pol.compute), pol), a, b
+    )
+    res_leaves = jax.tree.leaves(vjp)
+    sizes = {str(l.dtype) for l in res_leaves if hasattr(l, "dtype") and l.ndim == 2}
+    assert "float8_e4m3fn" in sizes, sizes

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the engine's invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import perfmodel, semiring
+from repro.core.precision import FP32_REF
+from repro.kernels import ops, ref
+
+_dims = st.integers(min_value=1, max_value=40)
+_gops = st.sampled_from(semiring.TABLE1)
+
+
+def _mat(m, n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, gop=_gops, seed=st.integers(0, 2**16))
+def test_kernel_matches_oracle_any_shape(m, k, n, gop, seed):
+    """Padding/leftover handling must be invisible for every Table-1 op."""
+    x, w = _mat(m, k, seed), _mat(k, n, seed + 1)
+    y = _mat(m, n, seed + 2)
+    want = np.asarray(ref.gemm_op_ref(x, w, y, gop, FP32_REF))
+    got = np.asarray(
+        ops.gemm_op(x, w, y, gop=gop, policy=FP32_REF,
+                    backend="pallas_interpret", block_m=8, block_n=128, block_k=8)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, gop=_gops, seed=st.integers(0, 2**16))
+def test_xla_backend_matches_oracle(m, k, n, gop, seed):
+    x, w = _mat(m, k, seed), _mat(k, n, seed + 1)
+    want = np.asarray(ref.gemm_op_ref(x, w, None, gop, FP32_REF))
+    got = np.asarray(
+        ops.gemm_op(x, w, None, gop=gop, policy=FP32_REF, backend="xla")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, gop=_gops, seed=st.integers(0, 2**16))
+def test_y_combination_is_star_fold(m, k, n, gop, seed):
+    """gemm_op(x,w,y) == star(y, gemm_op(x,w)) — the CE feedback identity."""
+    x, w = _mat(m, k, seed), _mat(k, n, seed + 1)
+    y = _mat(m, n, seed + 2)
+    base = ref.gemm_op_ref(x, w, None, gop, FP32_REF)
+    fold = semiring.op_fn(gop.star)(y, base)
+    direct = ref.gemm_op_ref(x, w, y, gop, FP32_REF)
+    np.testing.assert_allclose(
+        np.asarray(direct), np.asarray(fold), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 300), n=st.integers(1, 300), k=st.integers(1, 300),
+)
+def test_perfmodel_cycles_monotone_in_work(m, n, k):
+    """More MACs never take fewer cycles; utilization <= 1."""
+    c1 = perfmodel.redmule_cycles(m, n, k)
+    c2 = perfmodel.redmule_cycles(m + 13, n, k)
+    assert c2.cycles >= c1.cycles
+    assert 0.0 < c1.utilization <= 1.0
+    assert 0.0 <= c1.waste < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 64))
+def test_apsp_triangle_inequality(seed, n):
+    """APSP step output never exceeds the direct edge (min with Y=D)."""
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)).astype(np.float32) * 10
+    out = np.asarray(
+        ref.gemm_op_ref(jnp.asarray(d), jnp.asarray(d), jnp.asarray(d),
+                        semiring.ALL_PAIRS_SHORTEST_PATH, FP32_REF)
+    )
+    assert (out <= d + 1e-5).all()

@@ -1,0 +1,76 @@
+"""Table-1 semantics of the GEMM-Ops registry."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import semiring
+from repro.core.precision import FP32_REF
+from repro.kernels import ref
+
+
+def test_table1_complete():
+    names = {g.name for g in semiring.TABLE1}
+    assert names == {
+        "matmul", "max_critical_path", "apsp", "max_reliability_path",
+        "min_reliability_path", "min_spanning_tree", "max_capacity_path",
+    }
+    groups = {g.name: g.group for g in semiring.TABLE1}
+    assert groups["matmul"] == 0
+    assert groups["min_spanning_tree"] == 2 and groups["max_capacity_path"] == 2
+    # Group 1: circ in {+, x}; Group 2: circ in {min, max}
+    for g in semiring.TABLE1:
+        if g.group == 1:
+            assert g.circ in (semiring.Op.ADD, semiring.Op.MUL)
+        if g.group == 2:
+            assert g.circ in (semiring.Op.MIN, semiring.Op.MAX)
+
+
+def test_only_gemm_uses_mxu():
+    assert semiring.MATMUL.uses_mxu
+    assert not any(g.uses_mxu for g in semiring.TABLE1 if g is not semiring.MATMUL)
+
+
+def test_apsp_matches_floyd_warshall_step(rng):
+    """One min-plus matrix square = one step of repeated-squaring APSP."""
+    n = 12
+    d = rng.random((n, n)).astype(np.float32) * 10
+    np.fill_diagonal(d, 0.0)
+    want = np.min(d[:, :, None] + d[None, :, :], axis=1)
+    want = np.minimum(want, d)
+    got = ref.gemm_op_ref(
+        jnp.asarray(d), jnp.asarray(d), jnp.asarray(d),
+        semiring.ALL_PAIRS_SHORTEST_PATH, FP32_REF,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_max_reliability(rng):
+    n = 8
+    p = rng.random((n, n)).astype(np.float32)
+    want = np.maximum(p, np.max(p[:, :, None] * p[None, :, :], axis=1))
+    got = ref.gemm_op_ref(
+        jnp.asarray(p), jnp.asarray(p), jnp.asarray(p),
+        semiring.MAX_RELIABILITY_PATH, FP32_REF,
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_matmul_is_plain_gemm(rng):
+    x = rng.standard_normal((5, 7)).astype(np.float32)
+    w = rng.standard_normal((7, 3)).astype(np.float32)
+    y = rng.standard_normal((5, 3)).astype(np.float32)
+    got = ref.gemm_op_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), x @ w + y, rtol=1e-5)
+
+
+@pytest.mark.parametrize("gop", semiring.TABLE1, ids=lambda g: g.name)
+def test_star_identity_absorbs(gop, rng):
+    """Appending identity-valued Y leaves the star-reduction unchanged."""
+    x = jnp.asarray(rng.random((4, 6)).astype(np.float32))
+    w = jnp.asarray(rng.random((6, 5)).astype(np.float32))
+    ident = semiring.reduce_identity(gop.star)
+    ident = np.float32(np.clip(ident, -1e30, 1e30))
+    y_id = jnp.full((4, 5), ident)
+    a = ref.gemm_op_ref(x, w, None, gop, FP32_REF)
+    b = ref.gemm_op_ref(x, w, y_id, gop, FP32_REF)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

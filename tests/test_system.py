@@ -1,0 +1,105 @@
+"""End-to-end behaviour: training reduces loss; anomaly guard skips bad
+steps; checkpoint/restart resumes bitwise-identically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get_config
+from repro.data import for_model
+from repro.models import build
+from repro.optim import AdamW, cosine_schedule
+from repro.training import TrainState, make_train_step
+
+
+def _fresh(arch="granite-3-8b", lr=3e-3, steps=40):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(lr, 5, steps), weight_decay=0.0)
+    state = TrainState(
+        jnp.zeros((), jnp.int32), params, opt.init(params), jnp.zeros((), jnp.int32)
+    )
+    return cfg, model, opt, state
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    cfg, model, opt, state = _fresh(lr=1e-2, steps=80)
+    data = for_model(cfg, seq_len=32, global_batch=8, seed=0)
+    step = jax.jit(make_train_step(model, opt))
+    losses = []
+    for i in range(80):
+        state, m = step(state, data.batch(i))
+        losses.append(float(m["loss"]))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first * 0.92, (first, last)
+
+
+def test_anomaly_guard_skips_nan_batch():
+    cfg, model, opt, state = _fresh()
+    data = for_model(cfg, seq_len=16, global_batch=4)
+    step = jax.jit(make_train_step(model, opt))
+    state, _ = step(state, data.batch(0))
+    good = state
+
+    # Poison the params' gradient path via a NaN-producing batch is hard with
+    # int tokens; instead poison params and verify guard keeps old state.
+    bad_params = jax.tree.map(
+        lambda x: x.at[(0,) * x.ndim].set(jnp.nan) if x.ndim and x.dtype != jnp.int32 else x,
+        good.params,
+    )
+    bad_state = TrainState(good.step, bad_params, good.opt_state, good.skipped)
+    new_state, m = step(bad_state, data.batch(1))
+    assert int(new_state.skipped) == int(good.skipped) + 1
+    # params unchanged by the skipped update (still the poisoned ones)
+    same = jax.tree.map(
+        lambda a, b: np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True),
+        new_state.params, bad_params,
+    )
+    assert all(jax.tree.leaves(same))
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 over a 2x batch == single step on the same data, approximately
+    (loss metric equality is exact; update equality within fp tolerance)."""
+    cfg, model, opt, state = _fresh(lr=1e-3)
+    data = for_model(cfg, seq_len=16, global_batch=8)
+    batch = data.batch(0)
+    step1 = jax.jit(make_train_step(model, opt, grad_accum=1))
+    step2 = jax.jit(make_train_step(model, opt, grad_accum=2))
+    s1, m1 = step1(state, batch)
+    s2, m2 = step2(state, batch)
+    # metric reported by accum path is the mean micro loss
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-2
+    d = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        s1.params, s2.params,
+    )
+    assert max(jax.tree.leaves(d)) < 5e-2
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    cfg, model, opt, state = _fresh(lr=1e-3)
+    data = for_model(cfg, seq_len=16, global_batch=4)
+    step = jax.jit(make_train_step(model, opt))
+    for i in range(3):
+        state, _ = step(state, data.batch(i))
+    ckpt.save(str(tmp_path), 3, state)
+
+    # continue directly
+    cont = state
+    for i in range(3, 6):
+        cont, _ = step(cont, data.batch(i))
+
+    # restart from the checkpoint
+    like = jax.eval_shape(lambda: state)
+    restored = ckpt.restore(str(tmp_path), 3, like)
+    resumed = TrainState(*restored) if not isinstance(restored, TrainState) else restored
+    for i in range(3, 6):
+        resumed, _ = step(resumed, data.batch(i))
+
+    for a, b in zip(jax.tree.leaves(cont.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
