@@ -1,0 +1,93 @@
+"""xla-vs-pallas backend comparison on the paper's TinyML GEMM shapes.
+
+One row per (workload shape, policy, backend): the differentiable engine
+path (``mp_matmul`` fwd + bwd where marked) timed end to end. On a CPU host
+the pallas rows run the *interpret* backend — they measure dispatch/padding
+overhead and numerical plumbing, not TPU kernel speed; on a TPU host set
+``backend=pallas`` for real kernel timings. The ``derived`` column carries
+the xla-vs-pallas ratio so regressions in the dispatch layer are visible
+regardless of absolute host speed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_call
+from repro.configs import paper_tinyml as pt
+from repro.core import redmule
+from repro.core.precision import REDMULE_FP16, REDMULE_HFP8
+
+# Representative Table-1/TinyMLPerf shapes: ResNet8 stem + mid conv, the
+# MobileNetV2 depthwise case (M large, N tiny), TinyTransformer attention.
+SMOKE_SHAPES = [
+    pt.RESNET8[1],          # s1_conv1 1024x144x16
+    pt.RESNET8[6],          # s3_conv1 64x288x64
+    pt.TINY_TRANSFORMER[0], # qkv linear 64x64x192
+]
+FULL_EXTRA = [
+    pt.RESNET8[0],
+    pt.RESNET8[3],
+    pt.TINY_TRANSFORMER[1],
+    pt.TINY_TRANSFORMER[4],
+]
+
+POLICIES = (REDMULE_FP16, REDMULE_HFP8)
+BACKENDS = ("xla", "pallas_interpret")
+
+
+def _fwd_us(shape: pt.GemmShape, policy, backend: str) -> float:
+    x = jnp.ones((shape.M, shape.N), jnp.float32)  # paper: N is the K-dim
+    w = jnp.ones((shape.N, shape.K), jnp.float32)
+    f = jax.jit(functools.partial(redmule.mp_matmul, policy=policy, backend=backend))
+    return time_call(f, x, w)
+
+
+def _train_us(shape: pt.GemmShape, policy, backend: str) -> float:
+    """fwd + bwd (the paper's 3-GEMM training cost) through the engine VJP."""
+    x = jnp.ones((shape.M, shape.N), jnp.float32)
+    w = jnp.ones((shape.N, shape.K), jnp.float32)
+
+    @jax.jit
+    def step(x_, w_):
+        return jax.grad(
+            lambda a, b: jnp.sum(redmule.mp_matmul(a, b, policy, backend=backend)),
+            argnums=(0, 1),
+        )(x_, w_)
+
+    return time_call(step, x, w)
+
+
+def bench_backends(rows: Rows, *, smoke: bool = True) -> None:
+    shapes = SMOKE_SHAPES if smoke else SMOKE_SHAPES + FULL_EXTRA
+    for shape in shapes:
+        for policy in POLICIES:
+            us = {}
+            for backend in BACKENDS:
+                us[backend] = _fwd_us(shape, policy, backend)
+                rows.add(
+                    f"backends/{shape.name}/{policy.name}/{backend}/fwd",
+                    us[backend],
+                )
+            ratio = us["xla"] / max(us["pallas_interpret"], 1e-9)
+            rows.add(
+                f"backends/{shape.name}/{policy.name}/xla_over_pallas",
+                None,
+                f"{ratio:.3f}",
+            )
+        if not smoke:
+            t = _train_us(shape, REDMULE_HFP8, "pallas_interpret")
+            rows.add(f"backends/{shape.name}/redmule_hfp8/pallas/train_step", t)
+
+
+def main(smoke: bool = True) -> None:
+    rows = Rows()
+    print("name,us_per_call,derived")
+    bench_backends(rows, smoke=smoke)
+    rows.emit()
+
+
+if __name__ == "__main__":
+    main()

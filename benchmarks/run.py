@@ -1,21 +1,36 @@
-"""Benchmark driver: one section per paper table/figure + the roofline table.
+"""Benchmark driver: one section per paper table/figure + the roofline table
+and the xla-vs-pallas backend comparison.
 
 Prints ``name,us_per_call,derived`` CSV. ``derived`` is ``ours|paper`` when
-the paper states a value for the row.
+the paper states a value for the row. ``--smoke`` runs only the backend
+comparison on a reduced shape set (the CI nightly job's perf canary).
 """
 from __future__ import annotations
 
-from benchmarks import paper_figs
+import argparse
+
+from benchmarks import gemm_backends, paper_figs
 from benchmarks.common import Rows
 from benchmarks.roofline_table import roofline_rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="reduced run: backend comparison only, small shape set",
+    )
+    args = ap.parse_args(argv)
+
     rows = Rows()
     print("name,us_per_call,derived")
-    for bench in paper_figs.ALL:
-        bench(rows)
-    roofline_rows(rows)
+    if args.smoke:
+        gemm_backends.bench_backends(rows, smoke=True)
+    else:
+        for bench in paper_figs.ALL:
+            bench(rows)
+        roofline_rows(rows)
+        gemm_backends.bench_backends(rows, smoke=False)
     rows.emit()
 
 

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gemm_op, mp_matmul, semiring
+from repro.core import gemm_op, mp_matmul
 from repro.core.precision import REDMULE_HFP8, get_policy
 
 print("=== 1. GEMM-Ops (Table 1) ===")

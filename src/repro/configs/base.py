@@ -60,6 +60,7 @@ class ModelConfig:
 
     # Precision / engine
     policy: str = "tpu_bf16"
+    backend: str = "xla"  # GEMM engine: xla | pallas | pallas_interpret
     kv_cache_dtype: str = "bf16"  # "e4m3" enables the paper's fp8 storage
     fp8_params: bool = False  # store weight matrices in E4M3 (paper's
     # fp8-storage/16-bit-compute split applied to parameters; halves

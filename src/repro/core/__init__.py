@@ -2,19 +2,25 @@
 from repro.core import perfmodel, precision, semiring
 from repro.core.precision import PrecisionPolicy, get_policy
 from repro.core.redmule import (
+    BACKENDS,
     RedMulEConfig,
+    default_backend,
     gemm_op,
     linear,
     mp_matmul,
+    set_default_backend,
+    use_backend,
 )
 from repro.core.semiring import TABLE1, GemmOp, Op
 
 __all__ = [
+    "BACKENDS",
     "GemmOp",
     "Op",
     "PrecisionPolicy",
     "RedMulEConfig",
     "TABLE1",
+    "default_backend",
     "gemm_op",
     "get_policy",
     "linear",
@@ -22,4 +28,6 @@ __all__ = [
     "perfmodel",
     "precision",
     "semiring",
+    "set_default_backend",
+    "use_backend",
 ]

@@ -16,7 +16,6 @@ Matrix convention follows the paper: X is (M, N), W is (N, K), Z/Y are (M, K)
 from __future__ import annotations
 
 import dataclasses
-import math
 
 # ----------------------------------------------------------------------------
 # Hardware description

@@ -6,13 +6,18 @@ the paper's technique — hybrid-FP8 storage with FP16-class internal compute
 and wide accumulation — is applied uniformly, and so the distribution layer
 can reason about one GEMM substrate.
 
-Two execution paths:
-  - ``backend='xla'`` (default, used inside models under pjit): operands are
-    quantized to the storage grid (value-level), the dot runs on the MXU with
-    fp32 accumulation. This is what the 512-chip dry-run lowers.
-  - ``backend='pallas*'``: the explicit fused kernel in ``repro.kernels``
-    (fp8 bytes cross HBM, cast happens in VMEM). Validated in interpret mode;
-    the TPU lowering is the deployment path for fp8-storage GEMMs.
+Three execution backends, selected per call (``backend=``) or ambiently
+(``use_backend`` / ``set_default_backend``, threaded from ModelConfig through
+the training loop):
+  - ``'xla'`` (default): operands are quantized to the storage grid
+    (value-level), the dot runs on the MXU with fp32 accumulation. This is
+    what the 512-chip dry-run lowers.
+  - ``'pallas'`` / ``'pallas_interpret'``: the explicit fused kernel in
+    ``repro.kernels`` (fp8 bytes cross HBM, cast happens in VMEM), batched
+    via the kernel's outer grid axis. The VJP below routes the *backward*
+    GEMMs through the same kernel, so training runs end-to-end on the engine
+    — the MiniFloat-NN/ExSdotp pattern of fwd and bwd sharing one
+    low-precision unit.
 
 Training rule (paper Sec. 4.2.3, refs [10, 11]): forward GEMMs consume E4M3
 operands; backward GEMMs consume the incoming gradient quantized to E5M2 and
@@ -22,6 +27,7 @@ fp8 storage — halving activation memory, the software analogue of the paper's
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 
@@ -38,6 +44,48 @@ from repro.core.precision import (
 from repro.core.semiring import GemmOp
 from repro.kernels import ops as kernel_ops
 
+BACKENDS = ("xla", "pallas", "pallas_interpret")
+
+# Ambient backend: None means "no scope active" so config-level defaults
+# (RedMulEConfig.backend / ModelConfig.backend) can still apply underneath.
+_ambient_backend: str | None = None
+
+
+def _check_backend(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def set_default_backend(name: str) -> str | None:
+    """Set the ambient engine backend; returns the previous one (or None)."""
+    global _ambient_backend
+    prev = _ambient_backend
+    _ambient_backend = _check_backend(name)
+    return prev
+
+
+def default_backend() -> str:
+    return _ambient_backend or "xla"
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped ambient backend (trace-time: wrap the code being jit-traced)."""
+    global _ambient_backend
+    prev = _ambient_backend
+    _ambient_backend = _check_backend(name)
+    try:
+        yield
+    finally:
+        _ambient_backend = prev
+
+
+def _resolve_backend(backend: str | None) -> str:
+    if backend is None:
+        return default_backend()
+    return _check_backend(backend)
+
 
 @dataclasses.dataclass(frozen=True)
 class RedMulEConfig:
@@ -47,10 +95,10 @@ class RedMulEConfig:
     L: int = 12
     H: int = 4
     P: int = 3
-    # TPU BlockSpec tiles for the Pallas path.
-    block_m: int = 128
-    block_n: int = 128
-    block_k: int = 128
+    # TPU BlockSpec tiles for the Pallas path; None defers to kernels.tuning.
+    block_m: int | None = None
+    block_n: int | None = None
+    block_k: int | None = None
     policy: PrecisionPolicy = TPU_BF16
     backend: str = "xla"
 
@@ -75,17 +123,30 @@ def _swap_last(a):
 # mp_matmul: the mixed-precision GEMM with the paper's hybrid-FP8 VJP.
 # Supports a: (..., M, K) @ b: (..., K, N) with b either matching-batched or
 # unbatched (2D) — covers linear layers and attention dots without einsum.
+# On the pallas backends both the forward GEMM and the two backward GEMMs
+# (g @ w^T, x^T @ g) execute in the RedMulE kernel.
 # ----------------------------------------------------------------------------
 
 
-def mp_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: PrecisionPolicy = TPU_BF16):
-    """z = a @ b under the policy. a: (..., M, K); b: (..., K, N) or (K, N)."""
-    return _mp_core(a.astype(policy.compute), b.astype(policy.compute), policy)
+def mp_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    policy: PrecisionPolicy = TPU_BF16,
+    *,
+    backend: str | None = None,
+):
+    """z = a @ b under the policy. a: (..., M, K); b: (..., K, N) or (K, N).
+
+    ``backend=None`` uses the ambient default (see ``use_backend``).
+    """
+    backend = _resolve_backend(backend)
+    return _mp_core(a.astype(policy.compute), b.astype(policy.compute),
+                    policy, backend)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _mp_core(a, b, policy: PrecisionPolicy):
-    z, _ = _mp_core_fwd(a, b, policy)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _mp_core(a, b, policy: PrecisionPolicy, backend: str):
+    z, _ = _mp_core_fwd(a, b, policy, backend)
     return z
 
 
@@ -95,12 +156,22 @@ def _store_residual(x, policy: PrecisionPolicy):
     return x
 
 
-def _mp_core_fwd(a, b, policy: PrecisionPolicy):
-    aq = _quant(a, policy.storage_fwd)
-    bq = _quant(b, policy.storage_fwd)
-    z = jnp.matmul(aq, bq, preferred_element_type=policy.acc)
-    z = z.astype(policy.out)
-    return z, (_store_residual(aq, policy), _store_residual(bq, policy))
+def _mp_core_fwd(a, b, policy: PrecisionPolicy, backend: str):
+    if backend == "xla":
+        aq = _quant(a, policy.storage_fwd)
+        bq = _quant(b, policy.storage_fwd)
+        z = jnp.matmul(aq, bq, preferred_element_type=policy.acc)
+        z = z.astype(policy.out)
+        return z, (_store_residual(aq, policy), _store_residual(bq, policy))
+    # Pallas: operands cross HBM in the storage dtype; the kernel's cast
+    # units widen them in VMEM. Residuals are the very bytes the kernel read.
+    aq = a.astype(policy.storage_fwd)
+    bq = b.astype(policy.storage_fwd)
+    z = kernel_ops.gemm_op(
+        aq, bq, None, gop=semiring.MATMUL, policy=policy, backend=backend,
+        operand_quant=False,
+    )
+    return z, (aq, bq)
 
 
 def _sum_to_shape(x, shape):
@@ -116,15 +187,43 @@ def _sum_to_shape(x, shape):
     return x.reshape(shape)
 
 
-def _mp_core_bwd(policy: PrecisionPolicy, res, g):
+def _mp_core_bwd(policy: PrecisionPolicy, backend: str, res, g):
     aq, bq = res
-    # Backward GEMMs consume the E5M2-quantized gradient (paper's bwd format).
-    gq = _quant(g.astype(policy.compute), policy.storage_bwd)
     a_shape, b_shape = aq.shape, bq.shape
-    aq = aq.astype(policy.compute)
-    bq = bq.astype(policy.compute)
-    da = jnp.matmul(gq, _swap_last(bq), preferred_element_type=policy.acc)
-    db = jnp.matmul(_swap_last(aq), gq, preferred_element_type=policy.acc)
+    if backend == "xla":
+        # Backward GEMMs consume the E5M2-quantized gradient (paper bwd fmt).
+        gq = _quant(g.astype(policy.compute), policy.storage_bwd)
+        aq = aq.astype(policy.compute)
+        bq = bq.astype(policy.compute)
+        da = jnp.matmul(gq, _swap_last(bq), preferred_element_type=policy.acc)
+        db = jnp.matmul(_swap_last(aq), gq, preferred_element_type=policy.acc)
+        da = _sum_to_shape(da, a_shape).astype(policy.compute)
+        db = _sum_to_shape(db, b_shape).astype(policy.compute)
+        return da, db
+
+    # Pallas backward: both GEMMs run in the RedMulE kernel with mixed
+    # storage operands — E5M2 gradient x E4M3 residual (paper Sec. 4.2.3).
+    gq = g.astype(policy.compute).astype(policy.storage_bwd)
+    da = kernel_ops.gemm_op(
+        gq, _swap_last(bq), None, gop=semiring.MATMUL, policy=policy,
+        backend=backend, operand_quant=False, out_dtype=policy.compute,
+    )
+    if bq.ndim == 2 and gq.ndim > 2:
+        # Shared weight: dW = sum_batch x_b^T g_b == (flatten rows)^T @ g.
+        # One unbatched kernel GEMM instead of a batched GEMM + reduction.
+        kdim = aq.shape[-1]
+        n = gq.shape[-1]
+        af = aq.reshape(-1, kdim)
+        gf = gq.reshape(-1, n)
+        db = kernel_ops.gemm_op(
+            _swap_last(af), gf, None, gop=semiring.MATMUL, policy=policy,
+            backend=backend, operand_quant=False, out_dtype=policy.compute,
+        )
+    else:
+        db = kernel_ops.gemm_op(
+            _swap_last(aq), gq, None, gop=semiring.MATMUL, policy=policy,
+            backend=backend, operand_quant=False, out_dtype=policy.compute,
+        )
     da = _sum_to_shape(da, a_shape).astype(policy.compute)
     db = _sum_to_shape(db, b_shape).astype(policy.compute)
     return da, db
@@ -134,9 +233,10 @@ _mp_core.defvjp(_mp_core_fwd, _mp_core_bwd)
 
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
-           policy: PrecisionPolicy = TPU_BF16) -> jnp.ndarray:
+           policy: PrecisionPolicy = TPU_BF16, *,
+           backend: str | None = None) -> jnp.ndarray:
     """y = x @ w (+ b) through the engine. x: (..., K), w: (K, N)."""
-    y = mp_matmul(x, w, policy)
+    y = mp_matmul(x, w, policy, backend=backend)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -155,13 +255,15 @@ def gemm_op(
     """Full GEMM-Op surface (paper Table 1): Z = star(Y, star_k(circ(X, W))).
 
     Semiring ops are non-differentiable here (graph-analytics use cases);
-    gradients are stopped explicitly.
+    gradients are stopped explicitly. Differentiable training matmuls go
+    through ``mp_matmul``.
     """
     gop = semiring.get(op) if isinstance(op, str) else op
     if isinstance(policy, str):
         policy = get_policy(policy)
     cfg = config or RedMulEConfig()
-    backend = backend or cfg.backend
+    # Priority: explicit arg > active use_backend scope > engine config.
+    backend = _check_backend(backend or _ambient_backend or cfg.backend)
     out = kernel_ops.gemm_op(
         x,
         w,

@@ -1,0 +1,51 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+The repo targets current jax, but CI's CPU runners may carry an older
+jaxlib; these wrappers keep one code path for both.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def set_mesh(mesh):
+    """jax.set_mesh as a context manager, no-op on releases without it.
+
+    Only needed for Explicit/Auto axis-type propagation; all our jits carry
+    explicit NamedShardings, so lowering is unaffected when absent.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext()
+
+
+def axis_size(axis_name) -> int:
+    """jax.lax.axis_size, falling back to the psum(1, axis) static-size idiom
+    (constant-folded to a Python int on older releases)."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map, falling back to jax.experimental.shard_map.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name) — both toggle
+    the replication/varying-manual-axes check.
+    """
+    try:
+        sm = jax.shard_map  # jax >= 0.6
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as legacy
+
+        return legacy(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_vma=check_vma)

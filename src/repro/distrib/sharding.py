@@ -16,7 +16,6 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -1,5 +1,5 @@
-"""Pallas TPU kernels for the RedMulE engine + jnp oracle."""
-from repro.kernels import ops, ref
+"""Pallas TPU kernels for the RedMulE engine + jnp oracle + block tuning."""
+from repro.kernels import ops, ref, tuning
 from repro.kernels.redmule_gemm import redmule_gemm_pallas
 
-__all__ = ["ops", "ref", "redmule_gemm_pallas"]
+__all__ = ["ops", "ref", "redmule_gemm_pallas", "tuning"]

@@ -5,6 +5,13 @@ paper's "leftover" handling in software: ragged dims are padded to the tile
 grid with values that are absorbed by the (circ, star) pair, computed, and
 sliced back. See ``semiring.pad_value_for`` discussion + DESIGN.md (clock
 gating has no TPU analogue; padding-waste is the software observable).
+
+Batching: ``gemm_op`` accepts arbitrary leading batch dims on x (and
+optionally on w / y, broadcast-compatible). On the Pallas path the flattened
+batch becomes the kernel's outer grid axis; an unbatched w stays 2D and is
+shared across the batch (linear layers never replicate weights). Block sizes
+default to the selection layer in ``repro.kernels.tuning`` (heuristic table,
+env override, optional disk-cached autotune) instead of a hardcoded 128^3.
 """
 from __future__ import annotations
 
@@ -12,10 +19,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import semiring
 from repro.core.precision import FP32_REF, PrecisionPolicy
 from repro.core.semiring import GemmOp, Op
+from repro.kernels import tuning
 from repro.kernels.redmule_gemm import redmule_gemm_pallas
 
 
@@ -34,6 +43,17 @@ def _finite_identity(op: Op, dtype) -> float:
     return ident
 
 
+def _pad_last2(a, rows: int, cols: int, fill):
+    """Pad the trailing (rows, cols) of an nd array, batch dims untouched."""
+    if rows == a.shape[-2] and cols == a.shape[-1]:
+        return a
+    cfg = [(0, 0)] * (a.ndim - 2) + [
+        (0, rows - a.shape[-2]),
+        (0, cols - a.shape[-1]),
+    ]
+    return jnp.pad(a, cfg, constant_values=fill)
+
+
 def _pad_operands(x, w, y, gop: GemmOp, bm: int, bn: int, bk: int):
     """Pad (x, w, y) so padded K-lanes contribute the star identity.
 
@@ -41,12 +61,13 @@ def _pad_operands(x, w, y, gop: GemmOp, bm: int, bn: int, bk: int):
       mul: pad x-lanes with 0 (GEMM) or +/-"inf" and w-lanes with 1 (semiring)
       add: pad both with +/-"inf"/2 (sum hits the identity)
       min/max: pad both with the star identity
-    Padded M/N rows/cols are sliced away by the caller.
+    Padded M/N rows/cols are sliced away by the caller. x/w/y may carry
+    leading batch dims; only the trailing two are padded.
     """
-    m, k = x.shape
-    _, n = w.shape
+    m, k = x.shape[-2:]
+    n = w.shape[-1]
     mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
-    if (mp, np_, kp) == (m, n, k) and y is not None:
+    if (mp, np_, kp) == (m, n, k):
         return x, w, y, (m, n)
     if gop.is_gemm:
         x_fill = w_fill = 0.0
@@ -60,24 +81,21 @@ def _pad_operands(x, w, y, gop: GemmOp, bm: int, bn: int, bk: int):
         x_fill = _finite_identity(gop.star, x.dtype)
         w_fill = _finite_identity(gop.star, w.dtype)
 
-    x = jnp.pad(x, ((0, mp - m), (0, kp - k)), constant_values=x_fill)
-    w = jnp.pad(w, ((0, kp - k), (0, np_ - n)), constant_values=w_fill)
+    x = _pad_last2(x, mp, kp, x_fill)
+    w = _pad_last2(w, kp, np_, w_fill)
     if y is not None:
         y_fill = _finite_identity(gop.star, y.dtype) if not gop.is_gemm else 0.0
-        y = jnp.pad(y, ((0, mp - m), (0, np_ - n)), constant_values=y_fill)
+        y = _pad_last2(y, mp, np_, y_fill)
     return x, w, y, (m, n)
 
 
-def _xla_gemm_op(x, w, y, gop: GemmOp, policy: PrecisionPolicy, k_chunk: int = 512):
-    """Scalable XLA path: scan over K-chunks, never materializing (M, K, N)."""
-    cast = policy.cast_in_fwd
-    xc, wc = cast(x), cast(w)
-    if gop.is_gemm:
-        z = jnp.matmul(xc, wc, preferred_element_type=policy.acc)
-        if y is not None:
-            z = z + y.astype(policy.acc)
-        return policy.cast_out(z)
+# ---------------------------------------------------------------------------
+# XLA fallback
+# ---------------------------------------------------------------------------
 
+
+def _xla_semiring_2d(xc, wc, gop: GemmOp, policy: PrecisionPolicy, k_chunk: int):
+    """Scalable 2D semiring path: scan over K-chunks, never (M, K, N)."""
     m, k = xc.shape
     _, n = wc.shape
     circ = semiring.op_fn(gop.circ)
@@ -107,9 +125,45 @@ def _xla_gemm_op(x, w, y, gop: GemmOp, policy: PrecisionPolicy, k_chunk: int = 5
         return star(acc, red), None
 
     z, _ = jax.lax.scan(step, init, (xs, ws))
+    return z
+
+
+def _xla_gemm_op(
+    x, w, y, gop: GemmOp, policy: PrecisionPolicy, out_dtype, operand_quant: bool,
+    k_chunk: int = 512,
+):
+    """XLA path; batch dims broadcast jnp.matmul-style."""
+    if operand_quant:
+        xc, wc = policy.cast_in_fwd(x), policy.cast_in_fwd(w)
+    else:
+        xc, wc = x.astype(policy.compute), w.astype(policy.compute)
+    if gop.is_gemm:
+        z = jnp.matmul(xc, wc, preferred_element_type=policy.acc)
+        if y is not None:
+            z = z + y.astype(policy.acc)
+        return z.astype(out_dtype)
+
+    batch = np.broadcast_shapes(
+        xc.shape[:-2], wc.shape[:-2], () if y is None else y.shape[:-2]
+    )
+    run2d = functools.partial(
+        _xla_semiring_2d, gop=gop, policy=policy, k_chunk=k_chunk
+    )
+    if not batch:
+        z = run2d(xc, wc)
+    else:
+        xb = jnp.broadcast_to(xc, batch + xc.shape[-2:])
+        xb = xb.reshape((-1,) + xc.shape[-2:])
+        if wc.ndim == 2:
+            z = jax.vmap(lambda xi: run2d(xi, wc))(xb)
+        else:
+            wb = jnp.broadcast_to(wc, batch + wc.shape[-2:])
+            wb = wb.reshape((-1,) + wc.shape[-2:])
+            z = jax.vmap(run2d)(xb, wb)
+        z = z.reshape(batch + z.shape[-2:])
     if y is not None:
-        z = star(y.astype(policy.acc), z)
-    return policy.cast_out(z)
+        z = semiring.op_fn(gop.star)(y.astype(policy.acc), z)
+    return z.astype(out_dtype)
 
 
 def _reduce(op: Op, prod):
@@ -118,6 +172,66 @@ def _reduce(op: Op, prod):
     if op is Op.MIN:
         return jnp.min(prod, axis=1)
     return jnp.max(prod, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas path
+# ---------------------------------------------------------------------------
+
+
+def _pallas_gemm_op(
+    x, w, y, gop: GemmOp, policy: PrecisionPolicy,
+    bm: int, bn: int, bk: int, out_dtype, operand_quant: bool, interpret: bool,
+):
+    m, kdim = x.shape[-2:]
+    n = w.shape[-1]
+    batch_x, batch_w = x.shape[:-2], w.shape[:-2]
+    batch_y = () if y is None else y.shape[:-2]
+    out_batch = np.broadcast_shapes(batch_x, batch_w, batch_y)
+
+    # Quantize operands to the storage grid before padding so pad values are
+    # exactly representable and the kernel sees true storage dtypes. Callers
+    # that pre-quantize (the VJP's mixed E5M2/E4M3 backward GEMMs) pass
+    # operand_quant=False and their dtypes are forwarded untouched.
+    if operand_quant:
+        x = x.astype(policy.storage_fwd)
+        w = w.astype(policy.storage_fwd)
+    if y is not None:
+        y = y.astype(out_dtype)
+
+    w_shared = w.ndim == 2 or all(d == 1 for d in batch_w)
+    if w_shared:
+        w3 = w.reshape(w.shape[-2:])
+        x3 = jnp.broadcast_to(x, out_batch + (m, kdim))
+    else:
+        w3 = jnp.broadcast_to(w, out_batch + (kdim, n))
+        w3 = w3.reshape((-1, kdim, n))
+        x3 = jnp.broadcast_to(x, out_batch + (m, kdim))
+    if out_batch:
+        x3 = x3.reshape((-1, m, kdim))
+
+    y3 = y
+    if y is not None and y.ndim > 2 and any(d != 1 for d in y.shape[:-2]):
+        y3 = jnp.broadcast_to(y, out_batch + (m, n))
+        if out_batch:
+            y3 = y3.reshape((-1, m, n))
+    elif y is not None:
+        y3 = y.reshape(y.shape[-2:])
+
+    x3, w3, y3, (mo, no) = _pad_operands(x3, w3, y3, gop, bm, bn, bk)
+    z = redmule_gemm_pallas(
+        x3, w3, y3,
+        gop=gop, policy=policy,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    z = z[..., :mo, :no]
+    return z.reshape(out_batch + (mo, no))
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(
@@ -129,8 +243,29 @@ def _reduce(op: Op, prod):
         "block_n",
         "block_k",
         "backend",
+        "out_dtype",
+        "operand_quant",
     ),
 )
+def _gemm_op_impl(
+    x, w, y, *,
+    gop: GemmOp, policy: PrecisionPolicy,
+    block_m: int, block_n: int, block_k: int,
+    backend: str, out_dtype, operand_quant: bool,
+):
+    out_dtype = policy.out if out_dtype is None else out_dtype
+    if backend == "xla":
+        return _xla_gemm_op(x, w, y, gop, policy, out_dtype, operand_quant)
+    if backend not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"unknown backend {backend!r}; expected xla|pallas|pallas_interpret"
+        )
+    return _pallas_gemm_op(
+        x, w, y, gop, policy, block_m, block_n, block_k, out_dtype,
+        operand_quant, interpret=backend == "pallas_interpret",
+    )
+
+
 def gemm_op(
     x: jnp.ndarray,
     w: jnp.ndarray,
@@ -138,39 +273,43 @@ def gemm_op(
     *,
     gop: GemmOp = semiring.MATMUL,
     policy: PrecisionPolicy = FP32_REF,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     backend: str = "xla",  # xla | pallas | pallas_interpret
+    out_dtype=None,
+    operand_quant: bool = True,
 ) -> jnp.ndarray:
-    """Public GEMM-Op entry point: Z = star(Y, star_k(circ(X, W)))."""
-    if backend == "xla":
-        return _xla_gemm_op(x, w, y, gop, policy)
+    """Public GEMM-Op entry point: Z = star(Y, star_k(circ(X, W))).
 
-    interpret = backend == "pallas_interpret"
-    m, kdim = x.shape
-    _, n = w.shape
-    bm = min(block_m, _ceil_to(m, 8))
-    bn = min(block_n, _ceil_to(n, 128))
-    bk = min(block_k, _ceil_to(kdim, 8))
-    # Quantize operands to the storage grid before padding so pad values are
-    # exactly representable and the kernel sees true storage dtypes.
-    xs = x.astype(policy.storage_fwd)
-    ws = w.astype(policy.storage_fwd)
-    ys = None if y is None else y.astype(policy.out)
-    xs, ws, ys, (mo, no) = _pad_operands(xs, ws, ys, gop, bm, bn, bk)
-    z = redmule_gemm_pallas(
-        xs,
-        ws,
-        ys,
-        gop=gop,
-        policy=policy,
-        block_m=bm,
-        block_n=bn,
-        block_k=bk,
-        interpret=interpret,
+    x: (..., M, K); w: (K, N) or (..., K, N); y: optional (M, N) / (..., M, N)
+    — leading dims broadcast. ``block_* = None`` defers to the tuning layer.
+    """
+    m, kdim = x.shape[-2:]
+    n = w.shape[-1]
+    requested = (block_m, block_n, block_k)
+    if backend != "xla":
+        concrete = not isinstance(x, jax.core.Tracer)
+        if (
+            concrete
+            and tuning.autotune_enabled()
+            and all(b is None for b in requested)
+        ):
+            block_m, block_n, block_k = tuning.autotune_block_sizes(
+                x, w, y, gop=gop, policy=policy, backend=backend
+            )
+        else:
+            block_m, block_n, block_k = tuning.resolve_block_sizes(
+                m, n, kdim, policy=policy, requested=requested
+            )
+    else:
+        block_m, block_n, block_k = 0, 0, 0  # unused on the XLA path
+    return _gemm_op_impl(
+        x, w, y,
+        gop=gop, policy=policy,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        backend=backend, out_dtype=out_dtype, operand_quant=operand_quant,
     )
-    return z[:mo, :no]
 
 
 def matmul(x, w, y=None, *, policy=FP32_REF, backend="xla", **kw):

@@ -13,8 +13,13 @@ TPU mapping of the paper's datapath (DESIGN.md Sec. 2):
     combined with the star operator. This is the honest TPU analogue of the
     paper's FNCOMP CE stage.
 
-Grid: (M/bm, N/bn, K/bk), K innermost. The accumulator initializes from Y
-(the GEMM-Op bias matrix) when present — valid because ``star`` is
+Grid: (B, M/bm, N/bn, K/bk) with K innermost and batch as the *outermost*
+grid axis (not ``vmap``-of-``pallas_call``: one launch covers the whole
+batch, so the weight tile for an unbatched ``w`` is streamed once per (i, j)
+and shared across batch steps instead of being replicated per example).
+``w`` and ``y`` may each be unbatched (2D — broadcast over B, the linear
+layer case) or batched (3D, leading dim B). The accumulator initializes from
+Y (the GEMM-Op bias matrix) when present — valid because ``star`` is
 associative and commutative, so folding Y in first equals combining it last.
 """
 from __future__ import annotations
@@ -45,6 +50,11 @@ def _star_reduce(op: semiring.Op, x, axis):
     raise ValueError(op)
 
 
+def _read_tile(ref):
+    """Load a (bm, bn)-shaped tile from a 2D (shared) or 3D (batched) ref."""
+    return ref[0] if len(ref.shape) == 3 else ref[...]
+
+
 def _kernel(
     x_ref,
     w_ref,
@@ -57,19 +67,19 @@ def _kernel(
     compute_dtype,
     acc_dtype,
 ):
-    k = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
         if y_ref is not None:
-            acc_ref[...] = y_ref[...].astype(acc_dtype)
+            acc_ref[...] = _read_tile(y_ref).astype(acc_dtype)
         else:
             ident = semiring.reduce_identity(gop.star)
             acc_ref[...] = jnp.full(acc_ref.shape, ident, acc_dtype)
 
     # Input cast unit: storage (possibly fp8) -> CE datapath format.
-    x = x_ref[...].astype(compute_dtype)
-    w = w_ref[...].astype(compute_dtype)
+    x = x_ref[0].astype(compute_dtype)
+    w = _read_tile(w_ref).astype(compute_dtype)
 
     if gop.is_gemm:
         acc_ref[...] += jax.lax.dot_general(
@@ -94,7 +104,7 @@ def _kernel(
     @pl.when(k == nk - 1)
     def _flush():
         # Output cast unit: accumulator -> storage format.
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 def redmule_gemm_pallas(
@@ -107,22 +117,30 @@ def redmule_gemm_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    out_dtype=None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Tiled GEMM-Op. Shapes must already be padded to block multiples.
 
-    x: (M, K) and w: (K, N) in a storage dtype (fp8/fp16/bf16/fp32);
-    y: optional (M, N). Returns (M, N) in ``policy.out``.
+    x: (M, K) or (B, M, K); w: (K, N) or (B, K, N); y: optional (M, N) or
+    (B, M, N) — all in a storage dtype (fp8/fp16/bf16/fp32). Unbatched w/y
+    broadcast over B. Returns x's rank with trailing (M, N), in ``out_dtype``
+    (default ``policy.out``).
     """
-    m, k = x.shape
-    k2, n = w.shape
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, m, k = x.shape
+    k2, n = w.shape[-2:]
     assert k == k2, (x.shape, w.shape)
+    assert w.ndim == 2 or w.shape[0] == b, (x.shape, w.shape)
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
         (m, n, k),
         (block_m, block_n, block_k),
     )
     nk = k // block_k
-    grid = (m // block_m, n // block_n, nk)
+    grid = (b, m // block_m, n // block_n, nk)
+    out_dtype = policy.out if out_dtype is None else out_dtype
 
     kernel = functools.partial(
         _kernel,
@@ -132,12 +150,26 @@ def redmule_gemm_pallas(
         acc_dtype=policy.acc,
     )
     in_specs = [
-        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, block_m, block_k), lambda bb, i, j, kk: (bb, i, kk)),
     ]
+    if w.ndim == 3:
+        in_specs.append(
+            pl.BlockSpec((1, block_k, block_n), lambda bb, i, j, kk: (bb, kk, j))
+        )
+    else:
+        in_specs.append(
+            pl.BlockSpec((block_k, block_n), lambda bb, i, j, kk: (kk, j))
+        )
     operands = [x, w]
     if y is not None:
-        in_specs.append(pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)))
+        if y.ndim == 3:
+            in_specs.append(
+                pl.BlockSpec((1, block_m, block_n), lambda bb, i, j, kk: (bb, i, j))
+            )
+        else:
+            in_specs.append(
+                pl.BlockSpec((block_m, block_n), lambda bb, i, j, kk: (i, j))
+            )
         operands.append(y)
         body = kernel
     else:
@@ -145,12 +177,13 @@ def redmule_gemm_pallas(
             x_ref, w_ref, None, o_ref, acc_ref
         )
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         body,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), policy.out),
+        out_specs=pl.BlockSpec((1, block_m, block_n), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), policy.acc)],
         interpret=interpret,
     )(*operands)
+    return out[0] if squeeze else out

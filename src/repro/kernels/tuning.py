@@ -1,0 +1,235 @@
+"""Block-size selection for the RedMulE Pallas kernel.
+
+Replaces the hardcoded 128^3 tiles with a three-level policy:
+
+  1. Explicit ``block_*`` arguments (or the ``REPRO_BLOCK_MNK`` env var,
+     e.g. ``REPRO_BLOCK_MNK=64,128,256``) always win.
+  2. With ``REPRO_AUTOTUNE=1`` and concrete (non-traced) operands, a
+     timing-based autotune sweeps a candidate table and caches the winner to
+     disk, keyed by (backend, policy, op, B, M, N, K). Cache location:
+     ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/redmule_blocks.json``.
+  3. Otherwise a heuristic table keyed on the storage dtype's byte width
+     picks the tile: fp8 operands are 1 byte across HBM, so the K tile can
+     double at the same VMEM budget (the software analogue of the paper's
+     "FP8 doubles effective bandwidth").
+
+All levels clamp tiles to the (padded) problem so small/ragged shapes never
+allocate oversized VMEM tiles; the lane (N) dimension stays a multiple of
+128 per the TPU tiling constraint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+
+import jax.numpy as jnp
+
+LANE = 128
+# Sublane granularity per storage byte-width (TPU min-tile second-to-last dim).
+SUBLANE = {1: 32, 2: 16, 4: 8}
+# Base (bm, bn, bk) per storage byte-width, before clamping to the problem.
+_HEURISTIC = {
+    1: (128, 128, 256),  # fp8: 1 B/elem across HBM -> double the K tile
+    2: (128, 128, 128),  # fp16/bf16
+    4: (128, 128, 128),  # fp32
+}
+# VMEM budget for one grid step's working set (x, w, y/out, acc tiles).
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Candidate tilings swept by the autotuner (clamped/deduped per problem).
+AUTOTUNE_CANDIDATES = (
+    (128, 128, 128),
+    (128, 128, 256),
+    (128, 256, 128),
+    (256, 128, 128),
+    (64, 128, 128),
+    (64, 128, 256),
+    (32, 128, 512),
+    (128, 128, 64),
+)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "redmule_blocks.json"),
+    )
+
+
+def _vmem_bytes(bm: int, bn: int, bk: int, itemsize: int, acc_itemsize: int = 4) -> int:
+    operands = (bm * bk + bk * bn) * itemsize
+    acc_and_out = 2 * bm * bn * acc_itemsize
+    return operands + acc_and_out
+
+
+def clamp_blocks(
+    bm: int, bn: int, bk: int, m: int, n: int, k: int, itemsize: int = 4
+) -> tuple[int, int, int]:
+    """Clamp a tiling to the problem: no tile larger than the padded dim.
+
+    The cap rounds each dim up to the dtype's sublane granularity (SUBLANE)
+    / the 128 lane so a clamped tile still evenly divides the padded
+    problem. Explicit sub-sublane requests are honored as given (interpret
+    mode accepts them; real-TPU callers own that choice).
+    """
+    sub = SUBLANE.get(itemsize, 8)
+    bm = max(1, min(bm, _ceil_to(m, sub)))
+    bn = max(1, min(bn, _ceil_to(n, LANE)))
+    bk = max(1, min(bk, _ceil_to(k, sub)))
+    return bm, bn, bk
+
+
+def heuristic_block_sizes(
+    m: int, n: int, k: int, storage_dtype
+) -> tuple[int, int, int]:
+    """Table-driven tile choice keyed on storage byte width, problem-clamped.
+
+    Auto-selected tiles respect the dtype's TPU min-tile granularity: the
+    M/K tiles are multiples of SUBLANE[itemsize], N of the 128 lane.
+    """
+    itemsize = jnp.dtype(storage_dtype).itemsize
+    sub = SUBLANE.get(itemsize, 8)
+    bm, bn, bk = _HEURISTIC.get(itemsize, (128, 128, 128))
+    # Tall-skinny / short-wide adjustments: spend the VMEM budget on the
+    # dimension that actually exists (paper Fig. 11: M=1 depthwise rows).
+    if m <= 32 <= k:
+        bk = max(bk, 256 // itemsize)
+    while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
+        bk //= 2
+    bm, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+    # Round auto tiles up to the sublane/lane grid (still <= the caps above,
+    # which are sublane/lane multiples themselves).
+    return _ceil_to(bm, sub), _ceil_to(bn, LANE), _ceil_to(bk, sub)
+
+
+def _env_blocks() -> tuple[int | None, int | None, int | None]:
+    raw = os.environ.get("REPRO_BLOCK_MNK", "")
+    if not raw:
+        return (None, None, None)
+    try:
+        parts = [int(p) for p in raw.split(",")]
+        if len(parts) != 3:
+            raise ValueError(raw)
+    except ValueError:
+        warnings.warn(
+            f"ignoring malformed REPRO_BLOCK_MNK={raw!r} "
+            "(expected 'bm,bn,bk', e.g. '64,128,256'); using heuristic tiles",
+            stacklevel=3,
+        )
+        return (None, None, None)
+    return tuple(parts)  # type: ignore[return-value]
+
+
+def _load_cache(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_cache(path: str, cache: dict) -> None:
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # cache is best-effort; never fail the GEMM over it
+
+
+def autotune_block_sizes(
+    x,
+    w,
+    y,
+    *,
+    gop,
+    policy,
+    backend: str,
+    cache_path: str | None = None,
+    candidates=AUTOTUNE_CANDIDATES,
+    repeats: int = 3,
+) -> tuple[int, int, int]:
+    """Time each candidate tiling on the real operands; cache the winner.
+
+    Requires concrete arrays (call it outside jit). The cache survives across
+    processes so the sweep runs once per (backend, policy, op, shape).
+    """
+    import jax
+
+    from repro.kernels import ops as kernel_ops  # local: avoid import cycle
+
+    m, k = x.shape[-2], x.shape[-1]
+    n = w.shape[-1]
+    batch = 1
+    for d in x.shape[:-2]:
+        batch *= d
+    key = f"{backend}/{policy.name}/{gop.name}/{batch}x{m}x{n}x{k}"
+    path = cache_path or default_cache_path()
+    cache = _load_cache(path)
+    if key in cache:
+        return tuple(cache[key])
+
+    itemsize = jnp.dtype(policy.storage_fwd).itemsize
+    seen = set()
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        bm, bn, bk = clamp_blocks(*cand, m, n, k, itemsize)
+        if (bm, bn, bk) in seen:
+            continue
+        seen.add((bm, bn, bk))
+
+        def run():
+            return kernel_ops.gemm_op(
+                x, w, y, gop=gop, policy=policy, backend=backend,
+                block_m=bm, block_n=bn, block_k=bk,
+            )
+
+        try:
+            jax.block_until_ready(run())  # compile + correctness smoke
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run())
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+        except Exception:  # noqa: BLE001 — an invalid tiling just loses
+            continue
+        if t < best_t:
+            best, best_t = (bm, bn, bk), t
+
+    if best is None:
+        best = heuristic_block_sizes(m, n, k, policy.storage_fwd)
+    cache[key] = list(best)
+    _save_cache(path, cache)
+    return best
+
+
+def resolve_block_sizes(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    policy,
+    requested: tuple[int | None, int | None, int | None] = (None, None, None),
+) -> tuple[int, int, int]:
+    """Static (trace-safe) resolution: explicit args > env override > table."""
+    itemsize = jnp.dtype(policy.storage_fwd).itemsize
+    env = _env_blocks()
+    heur = heuristic_block_sizes(m, n, k, policy.storage_fwd)
+    bm, bn, bk = (
+        req if req is not None else (ev if ev is not None else hv)
+        for req, ev, hv in zip(requested, env, heur)
+    )
+    return clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "") == "1"

@@ -31,6 +31,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config  # noqa: E402
+from repro.distrib import compat  # noqa: E402
 from repro.distrib import sharding as shd  # noqa: E402
 from repro.launch.mesh import (  # noqa: E402
     dp_axes_of,
@@ -101,7 +102,7 @@ def lower_cell(arch: str, shape: str, mesh, *, args=None):
         "seq": seq, "batch": batch,
         "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
         "n_params": int(
-            sum(math.prod(l.shape) for l in jax.tree.leaves(params_shape))
+            sum(math.prod(leaf.shape) for leaf in jax.tree.leaves(params_shape))
         ),
     }
 
@@ -127,7 +128,7 @@ def lower_cell(arch: str, shape: str, mesh, *, args=None):
         bspecs = shd.batch_specs(batch_shape, dp_axes)
         bshard = shd.tree_shardings(bspecs, mesh)
         step = make_train_step(model, opt)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(state_shard, bshard),
@@ -144,7 +145,7 @@ def lower_cell(arch: str, shape: str, mesh, *, args=None):
         bshard = shd.tree_shardings(bspecs, mesh)
         max_len = seq if not cfg.is_encoder_decoder else max(seq // cfg.enc_dec_ratio, 1)
         fn = lambda p, b: prefill_step(p, b, max_len)  # noqa: E731
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 fn, in_shardings=(pshard, bshard), out_shardings=None
             ).lower(params_shape, batch_shape)
@@ -155,7 +156,7 @@ def lower_cell(arch: str, shape: str, mesh, *, args=None):
     cspecs = shd.cache_specs(specs["cache"], cfg, dp_axes, tp, batch, n_dp)
     cshard = shd.tree_shardings(cspecs, mesh)
     tshard = NamedSharding(mesh, P(dp_axes if batch % n_dp == 0 else None, None))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             decode_step,
             in_shardings=(pshard, tshard, cshard),

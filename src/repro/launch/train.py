@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import manager as ckpt
@@ -25,7 +24,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.data.pipeline import for_model
 from repro.distrib import sharding as shd
 from repro.distrib.fault import Heartbeat, StragglerMonitor
-from repro.launch.mesh import dp_axes_of, n_dp_of, tp_size_of
+from repro.launch.mesh import dp_axes_of, make_mesh, n_dp_of, tp_size_of
 from repro.models import build
 from repro.models.transformer import MeshCtx
 from repro.optim import AdamW, cosine_schedule
@@ -39,7 +38,7 @@ def make_mesh_from_args(args):
     else:
         dims = (n_dev, 1)
     axes = ("pod", "data", "model")[3 - len(dims):]
-    return jax.make_mesh(dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh(dims, axes)
 
 
 def main(argv=None):
@@ -56,6 +55,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--policy", default="")
+    ap.add_argument(
+        "--backend", choices=("", "xla", "pallas", "pallas_interpret"),
+        default="", help="GEMM engine for fwd+bwd matmuls (default: config)",
+    )
     ap.add_argument("--moe-impl", choices=("dense", "ep"), default="")
     ap.add_argument("--remat", choices=("none", "block"), default="")
     ap.add_argument("--log-every", type=int, default=10)
@@ -66,6 +69,8 @@ def main(argv=None):
     over = {}
     if args.policy:
         over["policy"] = args.policy
+    if args.backend:
+        over["backend"] = args.backend
     if args.moe_impl:
         over["moe_impl"] = args.moe_impl
     if args.remat:

@@ -24,8 +24,8 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | No
     return {"w": w.astype(dtype)}
 
 
-def dense_apply(p: Params, x, policy: PrecisionPolicy):
-    return _rm_linear(x, p["w"], p.get("b"), policy=policy)
+def dense_apply(p: Params, x, policy: PrecisionPolicy, backend: str | None = None):
+    return _rm_linear(x, p["w"], p.get("b"), policy=policy, backend=backend)
 
 
 def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
@@ -103,6 +103,6 @@ def embed_apply(p: Params, tokens):
     return jnp.take(p["table"], tokens, axis=0)
 
 
-def unembed_apply(p: Params, x, policy: PrecisionPolicy):
+def unembed_apply(p: Params, x, policy: PrecisionPolicy, backend: str | None = None):
     """Tied unembedding: logits = x @ table.T through the engine."""
-    return mp_matmul(x, p["table"].T, policy)
+    return mp_matmul(x, p["table"].T, policy, backend=backend)

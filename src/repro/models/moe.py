@@ -24,6 +24,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.precision import PrecisionPolicy
 from repro.core.redmule import mp_matmul
+from repro.distrib import compat
+from repro.distrib.compat import shard_map
 from repro.models import common
 
 
@@ -102,7 +104,7 @@ def _ep_local(params, x, cfg: MoEConfig, policy: PrecisionPolicy, ep_axis: str):
     t = b * s
     x2 = x.reshape(t, d)
     e_local = params["up"].shape[0]
-    n_shards = jax.lax.axis_size(ep_axis)
+    n_shards = compat.axis_size(ep_axis)
     shard = jax.lax.axis_index(ep_axis)
     e_total = e_local * n_shards
 
@@ -153,7 +155,7 @@ def apply_ep(params, x, cfg: MoEConfig, policy: PrecisionPolicy, mesh, dp_axes, 
         "gate": P(ep_axis),
         "down": P(ep_axis),
     }
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(pspec, P(dp_axes, None, None)),

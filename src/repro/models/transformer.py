@@ -58,6 +58,9 @@ class Transformer:
     def __init__(self, cfg: ModelConfig, mesh_ctx: MeshCtx | None = None):
         self.cfg = cfg
         self.policy: PrecisionPolicy = get_policy(cfg.policy)
+        # GEMM engine backend (xla | pallas | pallas_interpret) — applied by
+        # the step factories in repro.training via redmule.use_backend.
+        self.backend: str = getattr(cfg, "backend", "xla")
         self.mesh_ctx = mesh_ctx or MeshCtx()
         # fp8 parameter storage (paper: fp8 across "memory", 16-bit compute).
         self.dtype = jnp.float8_e4m3fn if cfg.fp8_params else self.policy.compute

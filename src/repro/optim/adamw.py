@@ -5,7 +5,7 @@ see distrib.sharding.zero1 for optimizer-state sharding).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,16 +6,21 @@ mandatory for the 256k-vocab archs at 4k sequence (67 GB/device otherwise).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import redmule
 from repro.models.transformer import Transformer
 
 AUX_LOSS_WEIGHT = 0.01
 XENT_CHUNK = 512
+
+
+def _engine_backend(model, backend: str | None) -> str:
+    """Backend resolution for the step factories: explicit arg > model config."""
+    return backend or getattr(model, "backend", None) or redmule.default_backend()
 
 
 def _shift_labels(tokens):
@@ -60,11 +65,16 @@ def chunked_xent(model: Transformer, params, h, labels, mask, chunk=XENT_CHUNK):
     return total, jnp.sum(mask)
 
 
-def make_loss_fn(model: Transformer) -> Callable:
+def make_loss_fn(model: Transformer, *, backend: str | None = None) -> Callable:
+    """Loss factory. ``backend`` selects the GEMM engine for every matmul in
+    the traced step (forward *and* its VJP); default is the model's config."""
+    eng = _engine_backend(model, backend)
+
     def loss_fn(params, batch):
-        h, aux = model.forward(params, batch)
-        labels, mask = _shift_labels(batch["tokens"])
-        total, denom = chunked_xent(model, params, h, labels, mask)
+        with redmule.use_backend(eng):
+            h, aux = model.forward(params, batch)
+            labels, mask = _shift_labels(batch["tokens"])
+            total, denom = chunked_xent(model, params, h, labels, mask)
         loss = total / jnp.maximum(denom, 1.0)
         return loss + AUX_LOSS_WEIGHT * aux, {"xent": loss, "aux": aux}
 
@@ -80,14 +90,16 @@ class TrainState(NamedTuple):
 
 
 def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True,
-                    grad_accum: int = 1) -> Callable:
+                    grad_accum: int = 1, backend: str | None = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     anomaly_guard: skip the update (keep params) when the global grad norm is
     non-finite — a NaN/inf produced by a bad batch or a flaky worker must not
     poison the replicated state (fault-tolerance at step granularity).
+    backend: GEMM engine for the step (xla | pallas | pallas_interpret);
+    defaults to the model's configured backend.
     """
-    loss_fn = make_loss_fn(model)
+    loss_fn = make_loss_fn(model, backend=backend)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(state: TrainState, batch):
@@ -97,9 +109,9 @@ def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True
                 batch,
             )
             def body(carry, mb):
-                (l, m), g = grad_fn(state.params, mb)
+                (lv, m), g = grad_fn(state.params, mb)
                 cl, cg = carry
-                return (cl + l, jax.tree.map(jnp.add, cg, g)), m
+                return (cl + lv, jax.tree.map(jnp.add, cg, g)), m
             zero_g = jax.tree.map(jnp.zeros_like, state.params)
             (loss, grads), metrics = jax.lax.scan(
                 body, (jnp.zeros(()), zero_g), mbs
@@ -132,16 +144,19 @@ def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True
     return train_step
 
 
-def make_serve_steps(model: Transformer):
+def make_serve_steps(model: Transformer, *, backend: str | None = None):
     """(prefill_step, decode_step) pair for serving."""
+    eng = _engine_backend(model, backend)
 
     def prefill_step(params, batch, max_len: int):
         cross = batch["frames"].shape[1] if "frames" in batch else 0
         cache = model.init_cache(batch["tokens"].shape[0], max_len, cross_len=cross)
-        logits, cache = model.prefill(params, batch, cache)
+        with redmule.use_backend(eng):
+            logits, cache = model.prefill(params, batch, cache)
         return logits, cache
 
     def decode_step(params, tokens, cache):
-        return model.decode_step(params, tokens, cache)
+        with redmule.use_backend(eng):
+            return model.decode_step(params, tokens, cache)
 
     return prefill_step, decode_step

@@ -1,5 +1,9 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 device; multi-device
-coverage runs in subprocesses (test_multidevice.py)."""
+coverage runs in subprocesses (test_multidevice.py).
+
+Markers (including ``slow``) are registered in pyproject.toml
+``[tool.pytest.ini_options]``, not here.
+"""
 import numpy as np
 import pytest
 
@@ -7,7 +11,3 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test")

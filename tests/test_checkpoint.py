@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_mesh
 
 
 def _tree(seed=0):
@@ -72,8 +73,7 @@ def test_restore_with_shardings(tmp_path):
 
     t = _tree()
     ckpt.save(str(tmp_path), 3, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     out = ckpt.restore(str(tmp_path), 3, jax.eval_shape(lambda: t), shardings=sh)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(t["w"]))

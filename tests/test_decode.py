@@ -3,7 +3,6 @@ teacher-forced forward logits position by position."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -21,7 +20,13 @@ def _fp32(cfg):
     return dataclasses.replace(cfg, policy="fp32", kv_cache_dtype="fp32")
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+_ARCH_PARAMS = [
+    a if a == "granite-3-8b" else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCH_IDS
+]
+
+
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_prefill_then_decode_matches_forward(arch):
     cfg = _fp32(get_config(arch, smoke=True))
     model = build(cfg)
@@ -56,6 +61,7 @@ def test_prefill_then_decode_matches_forward(arch):
         )
 
 
+@pytest.mark.slow
 def test_ring_buffer_window_decode():
     """Sliding-window cache smaller than the sequence stays correct: compare
     against a full-cache run of the same local-attention model."""

@@ -6,12 +6,16 @@ import pytest
 from repro.kernels import ops, ref
 
 CASES = [
-    # (b, sq, sk, hq, hkv, hd, causal, softcap)
+    # (b, sq, sk, hq, hkv, hd, causal, softcap); bigger interpret-mode cases
+    # run in the nightly slow job.
     (2, 32, 32, 4, 2, 16, True, None),
-    (1, 40, 72, 4, 4, 8, True, None),     # ragged + rectangular
-    (2, 16, 64, 8, 2, 32, False, None),   # bidirectional, GQA g=4
-    (1, 33, 33, 2, 1, 16, True, 50.0),    # gemma-style softcap, MQA
-    (1, 128, 128, 1, 1, 64, True, None),  # full-tile path
+    pytest.param((1, 40, 72, 4, 4, 8, True, None),
+                 marks=pytest.mark.slow),   # ragged + rectangular
+    (2, 16, 64, 8, 2, 32, False, None),     # bidirectional, GQA g=4
+    pytest.param((1, 33, 33, 2, 1, 16, True, 50.0),
+                 marks=pytest.mark.slow),   # gemma-style softcap, MQA
+    pytest.param((1, 128, 128, 1, 1, 64, True, None),
+                 marks=pytest.mark.slow),   # full-tile path
 ]
 
 

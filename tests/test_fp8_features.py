@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build, make_batch
@@ -37,6 +38,7 @@ def test_fp8_param_bytes_halved():
     assert n8 < 0.62 * n16, (n8, n16)
 
 
+@pytest.mark.slow
 def test_fp8_kv_cache_decode_close_to_bf16():
     cfg16 = dataclasses.replace(get_config("granite-3-8b", smoke=True))
     cfg8 = dataclasses.replace(cfg16, kv_cache_dtype="e4m3")

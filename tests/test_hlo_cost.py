@@ -1,7 +1,6 @@
 """Scan-aware HLO cost analyzer: exactness on known programs + parser units."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline import hlo_cost
 from repro.roofline.analysis import roofline_from_artifacts

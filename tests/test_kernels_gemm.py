@@ -31,6 +31,9 @@ def _tolerance(policy):
     return dict(rtol=1e-5, atol=1e-5)
 
 
+# Full Table-1 x shape sweep in interpret mode: thorough but slow. The fast
+# set keeps small-shape parity via test_pallas_dtype_sweep below.
+@pytest.mark.slow
 @pytest.mark.parametrize("gop", semiring.TABLE1, ids=lambda g: g.name)
 @pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
 def test_pallas_matches_ref_fp32(gop, shape, rng):

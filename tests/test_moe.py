@@ -2,8 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.precision import FP32_REF
+from repro.launch.mesh import make_mesh
 from repro.models import moe
 
 CFG = moe.MoEConfig(n_experts=4, top_k=2, d_model=16, d_ff=32,
@@ -25,25 +27,25 @@ def test_dense_routes_topk_only():
     assert float(aux) > 0  # load-balance loss is positive
 
 
+@pytest.mark.slow
 def test_ep_matches_dense_with_ample_capacity():
     """With capacity_factor high enough that nothing drops, EP == dense."""
     params, x = _setup()
     want, aux_d = moe.apply_dense(params, x, CFG, FP32_REF)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     got, aux_e = moe.apply_ep(params, x, CFG, FP32_REF, mesh, ("data",), "model")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(float(aux_e), float(aux_d), rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_ep_capacity_drops_are_bounded():
     """With tight capacity the output may drop tokens but stays finite and
     close to dense for the surviving ones (no NaN, no blowup)."""
     cfg = CFG._replace(capacity_factor=1.0)
     params, x = _setup(3)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     got, _ = moe.apply_ep(params, x, cfg, FP32_REF, mesh, ("data",), "model")
     assert np.isfinite(np.asarray(got)).all()
 
@@ -56,21 +58,20 @@ def test_dense_grads_flow():
         return jnp.sum(y**2) + 0.01 * aux
 
     g = jax.grad(loss)(params)
-    norms = [float(jnp.linalg.norm(l)) for l in jax.tree.leaves(g)]
+    norms = [float(jnp.linalg.norm(leaf)) for leaf in jax.tree.leaves(g)]
     assert all(np.isfinite(n) for n in norms)
     assert max(norms) > 0
 
 
 def test_ep_grads_flow():
     params, x = _setup(2)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     def loss(p):
         y, aux = moe.apply_ep(p, x, CFG, FP32_REF, mesh, ("data",), "model")
         return jnp.sum(y**2) + 0.01 * aux
 
     g = jax.jit(jax.grad(loss))(params)
-    norms = [float(jnp.linalg.norm(l)) for l in jax.tree.leaves(g)]
+    norms = [float(jnp.linalg.norm(leaf)) for leaf in jax.tree.leaves(g)]
     assert all(np.isfinite(n) for n in norms)
     assert max(norms) > 0

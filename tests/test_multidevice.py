@@ -7,6 +7,10 @@ import textwrap
 
 import pytest
 
+# Every test spawns a fresh interpreter (XLA_FLAGS host-device override) and
+# compiles a sharded cell — minutes of work on a CPU runner.
+pytestmark = pytest.mark.slow
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -32,6 +36,7 @@ def test_sharded_train_step_matches_single_device():
     from repro.data import for_model
     from repro.distrib import sharding as shd
     from repro.models import build
+    from repro.launch.mesh import make_mesh
     from repro.models.transformer import MeshCtx
     from repro.optim import AdamW
     from repro.training import TrainState, make_train_step
@@ -53,8 +58,7 @@ def test_sharded_train_step_matches_single_device():
     s1, m1 = step1(s1, batch)
 
     # sharded
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     ctx = MeshCtx(mesh=mesh, dp_axes=("pod", "data"), ep_axis="model")
     model2 = build(cfg, ctx)
     s2 = make_state(model2)
@@ -83,9 +87,9 @@ def test_compressed_psum_error_feedback():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.distrib.collectives import compressed_psum
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
     true_mean = jnp.mean(x, axis=0)
 
@@ -93,7 +97,8 @@ def test_compressed_psum_error_feedback():
         out, new_err = compressed_psum(xs, "data", err)
         return out, new_err
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    from repro.distrib.compat import shard_map
+    f = jax.jit(shard_map(body, mesh=mesh,
                 in_specs=(jax.sharding.PartitionSpec("data"),
                           jax.sharding.PartitionSpec("data")),
                 out_specs=(jax.sharding.PartitionSpec("data"),
@@ -125,6 +130,7 @@ def test_moe_ep_on_real_mesh():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.core.precision import FP32_REF
+    from repro.launch.mesh import make_mesh
     from repro.models import moe
 
     cfg = moe.MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=32,
@@ -133,8 +139,7 @@ def test_moe_ep_on_real_mesh():
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16), jnp.float32)
     want, _ = moe.apply_dense(params, x, cfg, FP32_REF)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     got, _ = jax.jit(lambda p, x_: moe.apply_ep(
         p, x_, cfg, FP32_REF, mesh, ("data",), "model"))(params, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -148,6 +153,7 @@ def test_zero1_specs_shard_moments():
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.distrib import sharding as shd
+    from repro.launch.mesh import make_mesh
 
     params = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
               "v": jax.ShapeDtypeStruct((7, 3), jnp.float32)}
@@ -159,15 +165,14 @@ def test_zero1_specs_shard_moments():
     """)
 
 
-@pytest.mark.slow
 def test_dryrun_smoke_cell_small_mesh():
     """A full dry-run cell (reduced mesh 2x4) end to end: lower, compile,
     roofline extraction. Uses the real (non-smoke) xlstm-125m config."""
     _run("""
     import jax
     from repro.launch import dryrun
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     lowered, meta = dryrun.lower_cell("xlstm-125m", "decode_32k", mesh)
     compiled = lowered.compile()
     from repro.roofline import analysis as ra

@@ -1,5 +1,4 @@
 """Optimizer substrate."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

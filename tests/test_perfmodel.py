@@ -1,6 +1,4 @@
 """The analytic perf model must reproduce the paper's measured points."""
-import numpy as np
-import pytest
 
 from repro.core import perfmodel as pm
 

@@ -8,7 +8,6 @@ from repro.core import redmule
 from repro.core.precision import (
     E4M3,
     E5M2,
-    FP32_REF,
     REDMULE_FP16,
     REDMULE_HFP8,
     REDMULE_HFP8_OUT8,
@@ -122,8 +121,9 @@ def test_fp8_residual_storage(rng):
     b = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
     _, vjp = jax.vjp(
         lambda a_, b_: redmule._mp_core(a_.astype(pol.compute),
-                                        b_.astype(pol.compute), pol), a, b
+                                        b_.astype(pol.compute), pol, "xla"),
+        a, b,
     )
     res_leaves = jax.tree.leaves(vjp)
-    sizes = {str(l.dtype) for l in res_leaves if hasattr(l, "dtype") and l.ndim == 2}
+    sizes = {str(r.dtype) for r in res_leaves if hasattr(r, "dtype") and r.ndim == 2}
     assert "float8_e4m3fn" in sizes, sizes

@@ -1,9 +1,16 @@
-"""Hypothesis property tests on the engine's invariants."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
-import jax.numpy as jnp
+"""Hypothesis property tests on the engine's invariants.
+
+Skips cleanly (instead of failing collection) on minimal installs without
+the ``dev`` extra — hypothesis is optional.
+"""
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import perfmodel, semiring
 from repro.core.precision import FP32_REF
@@ -18,6 +25,7 @@ def _mat(m, n, seed):
     return jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(m=_dims, k=_dims, n=_dims, gop=_gops, seed=st.integers(0, 2**16))
 def test_kernel_matches_oracle_any_shape(m, k, n, gop, seed):
@@ -32,6 +40,7 @@ def test_kernel_matches_oracle_any_shape(m, k, n, gop, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(m=_dims, k=_dims, n=_dims, gop=_gops, seed=st.integers(0, 2**16))
 def test_xla_backend_matches_oracle(m, k, n, gop, seed):

@@ -62,6 +62,7 @@ def test_anomaly_guard_skips_nan_batch():
     assert all(jax.tree.leaves(same))
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """accum=2 over a 2x batch == single step on the same data, approximately
     (loss metric equality is exact; update equality within fp tolerance)."""
