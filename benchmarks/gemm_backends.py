@@ -1,7 +1,7 @@
 """xla-vs-pallas backend comparison on the paper's TinyML GEMM shapes.
 
 One row per (workload shape, policy, backend): the differentiable engine
-path (``mp_matmul`` fwd + bwd where marked) timed end to end. On a CPU host
+path (``Engine.matmul`` fwd + bwd where marked) timed end to end. On a CPU host
 the pallas rows run the *interpret* backend — they measure dispatch/padding
 overhead and numerical plumbing, not TPU kernel speed; on a TPU host set
 ``backend=pallas`` for real kernel timings. The ``derived`` column carries
@@ -10,15 +10,13 @@ regardless of absolute host speed.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Rows, time_call
 from repro.configs import paper_tinyml as pt
-from repro.core import redmule
 from repro.core.precision import REDMULE_FP16, REDMULE_HFP8
+from repro.engine import Engine
 
 # Representative Table-1/TinyMLPerf shapes: ResNet8 stem + mid conv, the
 # MobileNetV2 depthwise case (M large, N tiny), TinyTransformer attention.
@@ -41,7 +39,7 @@ BACKENDS = ("xla", "pallas_interpret")
 def _fwd_us(shape: pt.GemmShape, policy, backend: str) -> float:
     x = jnp.ones((shape.M, shape.N), jnp.float32)  # paper: N is the K-dim
     w = jnp.ones((shape.N, shape.K), jnp.float32)
-    f = jax.jit(functools.partial(redmule.mp_matmul, policy=policy, backend=backend))
+    f = jax.jit(Engine(policy=policy, backend=backend).matmul)
     return time_call(f, x, w)
 
 
@@ -49,12 +47,12 @@ def _train_us(shape: pt.GemmShape, policy, backend: str) -> float:
     """fwd + bwd (the paper's 3-GEMM training cost) through the engine VJP."""
     x = jnp.ones((shape.M, shape.N), jnp.float32)
     w = jnp.ones((shape.N, shape.K), jnp.float32)
+    eng = Engine(policy=policy, backend=backend)
 
     @jax.jit
     def step(x_, w_):
         return jax.grad(
-            lambda a, b: jnp.sum(redmule.mp_matmul(a, b, policy, backend=backend)),
-            argnums=(0, 1),
+            lambda a, b: jnp.sum(eng.matmul(a, b)), argnums=(0, 1)
         )(x_, w_)
 
     return time_call(step, x, w)

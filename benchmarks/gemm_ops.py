@@ -1,0 +1,71 @@
+"""Per-op GEMM-Ops throughput vs plain GEMM — the software analogue of the
+paper's GEMM-Ops efficiency table (Table 5: semiring ops run on the same
+datapath at FNCOMP-stage rates instead of FMA rates).
+
+One row per (shape, Table 1 op, backend): ``Engine.gemm_op`` timed end to
+end through the jit dispatch layer. The ``derived`` column carries the
+op-vs-matmul time ratio on the same shape/backend — on TPU hardware this is
+the MXU-vs-VPU gap the paper's FNCOMP analysis predicts; on a CPU host it
+tracks dispatch/lowering regressions per op. The smoke set (CI canary) runs
+the xla backend only; the full set adds the interpret-mode kernel path and
+a closure row (repeated-squaring APSP, the Sec. 2.4 use case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, time_call
+from repro.core import semiring
+from repro.engine import Engine
+
+# The paper's 99.4%-utilization point and a larger square for the xla path.
+SMOKE_SHAPES = [(96, 96, 96)]
+FULL_SHAPES = [(96, 96, 96), (256, 256, 256)]
+
+
+def _op_us(engine: Engine, gop, m, k, n) -> float:
+    x = jnp.ones((m, k), jnp.float32)
+    w = jnp.ones((k, n), jnp.float32)
+    y = jnp.ones((m, n), jnp.float32)
+    f = jax.jit(lambda x_, w_, y_: engine.gemm_op(x_, w_, y_, op=gop))
+    return time_call(f, x, w, y)
+
+
+def bench_gemm_ops(rows: Rows, *, smoke: bool = True) -> None:
+    shapes = SMOKE_SHAPES if smoke else FULL_SHAPES
+    backends = ("xla",) if smoke else ("xla", "pallas_interpret")
+    for m, k, n in shapes:
+        tag = f"{m}x{k}x{n}"
+        for backend in backends:
+            eng = Engine(policy="redmule_fp16", backend=backend)
+            base = _op_us(eng, semiring.MATMUL, m, k, n)
+            rows.add(f"gemm_ops/{tag}/{backend}/matmul", base)
+            for gop in semiring.TABLE1:
+                if gop.is_gemm:
+                    continue
+                us = _op_us(eng, gop, m, k, n)
+                rows.add(
+                    f"gemm_ops/{tag}/{backend}/{gop.name}",
+                    us,
+                    f"{us / max(base, 1e-9):.2f}x_gemm",
+                )
+    if not smoke:
+        # Closure: ceil(log2(V)) engine calls with early exit (Sec. 2.4).
+        v = 96
+        eng = Engine(policy="redmule_fp16")
+        d = jnp.where(jnp.eye(v, dtype=bool), 0.0,
+                      jnp.ones((v, v), jnp.float32) * 5.0)
+        f = jax.jit(lambda a: eng.closure(a, op="apsp"))
+        rows.add(f"gemm_ops/closure_apsp/V={v}/xla", time_call(f, d))
+
+
+def main(smoke: bool = True) -> None:
+    rows = Rows()
+    print("name,us_per_call,derived")
+    bench_gemm_ops(rows, smoke=smoke)
+    rows.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ import numpy as np
 from benchmarks.common import Rows, time_call
 from repro.configs import paper_tinyml as pt
 from repro.core import perfmodel as pm
-from repro.core import redmule, semiring
+from repro.core import semiring
+from repro.engine import Engine
 from repro.core.precision import (
     REDMULE_FP16,
     REDMULE_HFP8,
@@ -30,7 +31,7 @@ from repro.kernels import ops
 def _engine_matmul_us(m, n, k, policy=REDMULE_FP16):
     x = jnp.ones((m, n), jnp.float32)
     w = jnp.ones((n, k), jnp.float32)
-    f = jax.jit(functools.partial(redmule.mp_matmul, policy=policy))
+    f = jax.jit(Engine(policy=policy).matmul)
     return time_call(f, x, w)
 
 
@@ -152,7 +153,7 @@ def fig10_error_analysis(rows: Rows):
     """Fig 10: RMSE vs reduction size N for the three format stacks.
 
     Inputs live on the fp8/fp16 storage grid; the oracle is the exact
-    product of the same stored values (see DESIGN.md Sec. 6)."""
+    product of the same stored values (see docs/DESIGN.md Sec. 6)."""
     rng = np.random.default_rng(0)
     for n in (16, 64, 256, 1024):
         x = jnp.asarray(rng.standard_normal((32, n)).astype(np.float32) / np.sqrt(n))
@@ -162,7 +163,7 @@ def fig10_error_analysis(rows: Rows):
             xq = x.astype(pol.storage_fwd).astype(jnp.float32)
             wq = w.astype(pol.storage_fwd).astype(jnp.float32)
             exact = np.asarray(jnp.matmul(xq, wq))
-            got = np.asarray(redmule.mp_matmul(xq, wq, pol), np.float32)
+            got = np.asarray(Engine(policy=pol).matmul(xq, wq), np.float32)
             rmse[pol.name] = float(np.sqrt(np.mean((exact - got) ** 2)))
         us = _engine_matmul_us(32, n, 32, REDMULE_HFP8)
         rows.add(f"fig10/N={n}/rmse_fp16", us, f"{rmse['redmule_fp16']:.2e}")

@@ -1,15 +1,17 @@
-"""Benchmark driver: one section per paper table/figure + the roofline table
-and the xla-vs-pallas backend comparison.
+"""Benchmark driver: one section per paper table/figure + the roofline table,
+the xla-vs-pallas backend comparison, and the per-op GEMM-Ops section
+(semiring throughput vs plain GEMM, tracked in BENCH_*.json).
 
 Prints ``name,us_per_call,derived`` CSV. ``derived`` is ``ours|paper`` when
 the paper states a value for the row. ``--smoke`` runs only the backend
-comparison on a reduced shape set (the CI nightly job's perf canary).
+comparison + GEMM-Ops sections on a reduced shape set (the CI nightly
+job's perf canary).
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks import gemm_backends, paper_figs
+from benchmarks import gemm_backends, gemm_ops, paper_figs
 from benchmarks.common import Rows
 from benchmarks.roofline_table import roofline_rows
 
@@ -26,11 +28,13 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     if args.smoke:
         gemm_backends.bench_backends(rows, smoke=True)
+        gemm_ops.bench_gemm_ops(rows, smoke=True)
     else:
         for bench in paper_figs.ALL:
             bench(rows)
         roofline_rows(rows)
         gemm_backends.bench_backends(rows, smoke=False)
+        gemm_ops.bench_gemm_ops(rows, smoke=False)
     rows.emit()
 
 

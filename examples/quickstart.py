@@ -2,35 +2,37 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-1. GEMM and GEMM-Ops (paper Table 1) through one engine call.
+1. One ``Engine`` handle: GEMM and GEMM-Ops (paper Table 1) as methods.
 2. Hybrid-FP8 mixed precision: E4M3 forward / E5M2 backward, FP16-class
    internal compute — the paper's scheme as a drop-in matmul.
 3. The Pallas TPU kernel, validated here in interpret mode.
+4. Differentiable semiring ops + the closure (APSP in one call).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gemm_op, mp_matmul
-from repro.core.precision import REDMULE_HFP8, get_policy
+from repro.engine import Engine
 
-print("=== 1. GEMM-Ops (Table 1) ===")
+print("=== 1. GEMM-Ops (Table 1) through one Engine ===")
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.random((6, 8)).astype(np.float32))
 w = jnp.asarray(rng.random((8, 5)).astype(np.float32))
 y = jnp.asarray(rng.random((6, 5)).astype(np.float32))
 
+eng = Engine(policy="fp32")
 for op in ("matmul", "apsp", "max_capacity_path"):
-    z = gemm_op(x, w, y, op=op)
+    z = eng.gemm_op(x, w, y, op=op)
     print(f"  {op:18s} -> shape {z.shape}, z[0,0] = {z[0,0]:.4f}")
 
 print("\n=== 2. Hybrid-FP8 training rule ===")
 a = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
 b = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+hfp8 = Engine(policy="redmule_hfp8")
 
 
 def loss(a_, b_):
-    return jnp.sum(mp_matmul(a_, b_, REDMULE_HFP8) ** 2)
+    return jnp.sum(hfp8.matmul(a_, b_) ** 2)
 
 
 val, (da, db) = jax.value_and_grad(loss, argnums=(0, 1))(a, b)
@@ -38,10 +40,23 @@ print(f"  forward consumes E4M3 operands; loss = {val:.3f}")
 print(f"  backward consumed E5M2 grads;   |da| = {jnp.linalg.norm(da):.3f}")
 
 print("\n=== 3. Pallas kernel (interpret mode on CPU; TPU is the target) ===")
-z_pallas = gemm_op(x, w, y, op="apsp", policy="redmule_fp16",
-                   backend="pallas_interpret")
-z_xla = gemm_op(x, w, y, op="apsp", policy="redmule_fp16", backend="xla")
+fp16 = Engine(policy="redmule_fp16")
+z_pallas = fp16.with_backend("pallas_interpret").gemm_op(x, w, y, op="apsp")
+z_xla = fp16.gemm_op(x, w, y, op="apsp")
 err = float(jnp.max(jnp.abs(z_pallas.astype(jnp.float32) - z_xla.astype(jnp.float32))))
 print(f"  pallas vs xla max abs diff: {err:.2e}")
 assert err < 1e-2
+
+print("\n=== 4. Differentiable semirings + closure ===")
+# d(min-plus matmul)/dx routes the cotangent along the argmin lanes — the
+# backpointers of the shortest-path DP (see examples/viterbi_decode.py).
+dx = jax.grad(lambda x_: jnp.sum(eng.gemm_op(x_, w, op="apsp")))(x)
+print(f"  apsp is differentiable: grad nonzeros = {int((dx != 0).sum())}")
+# The closure runs repeated min-plus squaring to the fixpoint in one call.
+INF = jnp.float32(3e4)
+adj = jnp.where(jnp.asarray(rng.random((8, 8)) < 0.4),
+                jnp.asarray(rng.random((8, 8)).astype(np.float32) * 9 + 1), INF)
+dist = eng.closure(adj, op="apsp")
+print(f"  closure(adj) mean distance: {float(jnp.mean(jnp.minimum(dist, INF))):.3f}")
+
 print("\nOK")

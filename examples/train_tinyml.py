@@ -11,8 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mp_matmul
-from repro.core.precision import get_policy
+from repro.engine import Engine
 
 DIMS = [64, 128, 128, 10]  # ResNet8-scale GEMM stack
 STEPS, BATCH, LR = 300, 64, 0.05
@@ -26,10 +25,10 @@ def init(key):
     ]
 
 
-def forward(params, x, policy):
+def forward(params, x, engine):
     h = x
     for i, w in enumerate(params):
-        h = mp_matmul(h, w, policy)
+        h = engine.matmul(h, w)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h
@@ -46,7 +45,7 @@ def make_data(key):
 
 
 def run(policy_name: str, seed=0):
-    policy = get_policy(policy_name)
+    engine = Engine(policy=policy_name)
     params = init(jax.random.PRNGKey(seed))
     batch_fn = make_data(jax.random.PRNGKey(99))
 
@@ -55,7 +54,7 @@ def run(policy_name: str, seed=0):
         x, y = batch_fn(k)
 
         def loss_fn(ps):
-            logits = forward(ps, x, policy).astype(jnp.float32)
+            logits = forward(ps, x, engine).astype(jnp.float32)
             return jnp.mean(
                 jax.nn.logsumexp(logits, -1)
                 - jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
@@ -70,7 +69,7 @@ def run(policy_name: str, seed=0):
         key, k = jax.random.split(key)
         params, loss = step(params, k)
     x, y = batch_fn(jax.random.PRNGKey(12345))
-    acc = float(jnp.mean(jnp.argmax(forward(params, x, policy), -1) == y))
+    acc = float(jnp.mean(jnp.argmax(forward(params, x, engine), -1) == y))
     return float(loss), acc
 
 

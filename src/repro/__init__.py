@@ -2,6 +2,6 @@
 
 Reproduction of Tortorella et al., "RedMulE: A Mixed-Precision Matrix-Matrix
 Operation Engine ..." (2023), scaled from a TinyML accelerator to a
-multi-pod JAX training/serving framework (see DESIGN.md).
+multi-pod JAX training/serving framework (see docs/DESIGN.md).
 """
 __version__ = "1.0.0"

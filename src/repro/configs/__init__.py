@@ -36,7 +36,7 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
 
 
 def cell_is_runnable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
-    """Whether (arch x shape) is a runnable dry-run cell (DESIGN.md Sec. 4)."""
+    """Whether (arch x shape) is a runnable dry-run cell (docs/DESIGN.md)."""
     if shape == "long_500k" and not cfg.supports_500k:
         return False, (
             "long_500k needs sub-quadratic context; full-attention arch skipped"

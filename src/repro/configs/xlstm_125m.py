@@ -6,7 +6,7 @@ O(1) decode state -> runs long_500k. [arXiv:2405.04517]
 Note: the published 125M config uses projection-factor block sandwiches; our
 assembler folds them into the cell in/out projections, instantiating 78M
 params at the same (12L, d768, 4H) skeleton — wiring simplification recorded
-in DESIGN.md, cell math (stabilized exponential gating) faithful.
+in docs/DESIGN.md, cell math (stabilized exponential gating) faithful.
 """
 from repro.configs.base import ModelConfig
 

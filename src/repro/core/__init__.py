@@ -1,33 +1,48 @@
-"""Core RedMulE engine: GEMM-Ops semirings, precision policies, perf model."""
+"""Core RedMulE numerics: Table-1 semirings, precision policies, perf model.
+
+The engine API itself lives in :mod:`repro.engine` (``Engine``,
+``engine_scope``, ``closure``). The pre-Engine names (``mp_matmul``,
+``gemm_op``, ``use_backend``, ...) remain importable from here as
+deprecated shims — resolved lazily so that importing ``repro.core`` for
+policies/semirings does not touch the deprecated module.
+"""
 from repro.core import perfmodel, precision, semiring
 from repro.core.precision import PrecisionPolicy, get_policy
-from repro.core.redmule import (
-    BACKENDS,
-    RedMulEConfig,
-    default_backend,
-    gemm_op,
-    linear,
-    mp_matmul,
-    set_default_backend,
-    use_backend,
-)
 from repro.core.semiring import TABLE1, GemmOp, Op
 
-__all__ = [
+# Deprecated engine-surface names served lazily from repro.core.redmule
+# (PEP 562): accessing any of them imports the shim module, which emits the
+# DeprecationWarning.
+_REDMULE_NAMES = (
     "BACKENDS",
+    "RedMulEConfig",
+    "default_backend",
+    "from_storage",
+    "gemm_op",
+    "linear",
+    "mp_matmul",
+    "set_default_backend",
+    "to_fp8_storage",
+    "use_backend",
+)
+
+__all__ = [
     "GemmOp",
     "Op",
     "PrecisionPolicy",
-    "RedMulEConfig",
     "TABLE1",
-    "default_backend",
-    "gemm_op",
     "get_policy",
-    "linear",
-    "mp_matmul",
     "perfmodel",
     "precision",
     "semiring",
-    "set_default_backend",
-    "use_backend",
+    *_REDMULE_NAMES,
 ]
+
+
+def __getattr__(name: str):
+    if name in _REDMULE_NAMES or name == "redmule":
+        import importlib
+
+        redmule = importlib.import_module("repro.core.redmule")
+        return redmule if name == "redmule" else getattr(redmule, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

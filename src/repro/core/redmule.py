@@ -1,40 +1,29 @@
-"""The RedMulE engine as a first-class JAX feature.
+"""DEPRECATED compatibility shims over :mod:`repro.engine`.
 
-Every matrix product in the framework (model projections, attention dots,
-embedding lookups' dual, optimizer-side casts) routes through this module so
-the paper's technique — hybrid-FP8 storage with FP16-class internal compute
-and wide accumulation — is applied uniformly, and so the distribution layer
-can reason about one GEMM substrate.
+This module was the engine's public surface before the ``Engine`` handle
+existed; every entry point now delegates to ``repro.engine`` and emits a
+``DeprecationWarning``. Migration map:
 
-Three execution backends, selected per call (``backend=``) or ambiently
-(``use_backend`` / ``set_default_backend``, threaded from ModelConfig through
-the training loop):
-  - ``'xla'`` (default): operands are quantized to the storage grid
-    (value-level), the dot runs on the MXU with fp32 accumulation. This is
-    what the 512-chip dry-run lowers.
-  - ``'pallas'`` / ``'pallas_interpret'``: the explicit fused kernel in
-    ``repro.kernels`` (fp8 bytes cross HBM, cast happens in VMEM), batched
-    via the kernel's outer grid axis. The VJP below routes the *backward*
-    GEMMs through the same kernel, so training runs end-to-end on the engine
-    — the MiniFloat-NN/ExSdotp pattern of fwd and bwd sharing one
-    low-precision unit.
+    mp_matmul(a, b, policy, backend=...)   -> Engine(policy=..., backend=...).matmul(a, b)
+    linear(x, w, b, policy, backend=...)   -> Engine(...).linear(x, w, b)
+    gemm_op(x, w, y, op=..., policy=...)   -> Engine(...).gemm_op(x, w, y, op=...)
+    use_backend(name) / set_default_backend -> engine_scope(Engine(backend=name))
+    RedMulEConfig(...)                     -> Engine(...) (same fields)
 
-Training rule (paper Sec. 4.2.3, refs [10, 11]): forward GEMMs consume E4M3
-operands; backward GEMMs consume the incoming gradient quantized to E5M2 and
-the saved E4M3 residuals. Residuals are *stored* in fp8 when the policy has
-fp8 storage — halving activation memory, the software analogue of the paper's
-"FP8 doubles effective bandwidth and CE count".
+Semantics preserved, with one upgrade: GEMM-Ops are now differentiable
+(the old surface stopped gradients on semiring ops; the engine routes them
+through tropical subgradients — see repro/engine/autodiff.py). The shims
+will be removed two PRs after all first-party call sites migrated; see the
+deprecation policy in README.md.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-import functools
+import warnings
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import semiring
 from repro.core.precision import (
     FP32_REF,
     PrecisionPolicy,
@@ -42,60 +31,108 @@ from repro.core.precision import (
     get_policy,
 )
 from repro.core.semiring import GemmOp
-from repro.kernels import ops as kernel_ops
+from repro.engine import (
+    BACKENDS,
+    DEFAULT_ENGINE,
+    Engine,
+    ambient_engine,
+    engine_scope,
+    set_ambient_engine,
+)
 
-BACKENDS = ("xla", "pallas", "pallas_interpret")
+# Kept importable: tests and downstream code monkeypatch the kernel layer
+# through this module's namespace.
+from repro.kernels import ops as kernel_ops  # noqa: F401
 
-# Ambient backend: None means "no scope active" so config-level defaults
-# (RedMulEConfig.backend / ModelConfig.backend) can still apply underneath.
-_ambient_backend: str | None = None
+__all__ = [
+    "BACKENDS",
+    "RedMulEConfig",
+    "default_backend",
+    "from_storage",
+    "gemm_op",
+    "linear",
+    "mp_matmul",
+    "set_default_backend",
+    "to_fp8_storage",
+    "use_backend",
+]
+
+warnings.warn(
+    "repro.core.redmule is deprecated; use the Engine API in repro.engine "
+    "(see docs/DESIGN.md for the migration map)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 
-def _check_backend(name: str) -> str:
-    if name not in BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
-    return name
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.redmule.{old} is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
-def set_default_backend(name: str) -> str | None:
-    """Set the ambient engine backend; returns the previous one (or None)."""
-    global _ambient_backend
-    prev = _ambient_backend
-    _ambient_backend = _check_backend(name)
-    return prev
+# The old set_default_backend was a process-wide module global visible to
+# every thread; contextvars scopes are per-context. The shim keeps the old
+# cross-thread semantics with this fallback, consulted only when no
+# engine_scope is active. New code should pass Engines explicitly.
+_process_default_backend: str | None = None
 
 
 def default_backend() -> str:
-    return _ambient_backend or "xla"
+    """Ambient engine backend (see ``repro.engine.engine_scope``), falling
+    back to the process-wide ``set_default_backend`` value."""
+    amb = ambient_engine()
+    if amb is not None:
+        return amb.backend
+    return _process_default_backend or "xla"
+
+
+def set_default_backend(name: str) -> str | None:
+    """Set the process-wide default backend; returns the previous one (or
+    None). Also updates the current context's ambient engine so the setter
+    and ``use_backend`` compose the way the old module global did."""
+    global _process_default_backend
+    prev_engine = ambient_engine()
+    prev = (
+        prev_engine.backend if prev_engine is not None
+        else _process_default_backend
+    )
+    base = prev_engine if prev_engine is not None else DEFAULT_ENGINE
+    set_ambient_engine(base.with_backend(name))  # validates name first
+    _process_default_backend = name
+    return prev
 
 
 @contextlib.contextmanager
 def use_backend(name: str):
     """Scoped ambient backend (trace-time: wrap the code being jit-traced)."""
-    global _ambient_backend
-    prev = _ambient_backend
-    _ambient_backend = _check_backend(name)
-    try:
+    amb = ambient_engine()
+    base = amb if amb is not None else DEFAULT_ENGINE
+    with engine_scope(base.with_backend(name)):
         yield
-    finally:
-        _ambient_backend = prev
 
 
-def _resolve_backend(backend: str | None) -> str:
-    if backend is None:
-        return default_backend()
-    return _check_backend(backend)
+def _shim_engine(policy: PrecisionPolicy | str, backend: str | None,
+                 blocks=(None, None, None)) -> Engine:
+    """Old resolution order: explicit backend > ambient scope > 'xla'."""
+    if isinstance(policy, str):
+        policy = get_policy(policy)
+    return Engine(
+        policy=policy,
+        backend=backend if backend is not None else default_backend(),
+        block_m=blocks[0], block_n=blocks[1], block_k=blocks[2],
+    )
 
 
 @dataclasses.dataclass(frozen=True)
 class RedMulEConfig:
-    """Engine configuration (the paper's design-time parameters + TPU tiles)."""
+    """DEPRECATED: absorbed into :class:`repro.engine.Engine` (same fields)."""
 
-    # Paper datapath parameters — drive the perf model and the Pallas tiles.
     L: int = 12
     H: int = 4
     P: int = 3
-    # TPU BlockSpec tiles for the Pallas path; None defers to kernels.tuning.
     block_m: int | None = None
     block_n: int | None = None
     block_k: int | None = None
@@ -107,25 +144,12 @@ class RedMulEConfig:
         """H*(P+1): the column width of one datapath tile (paper Sec. 4.3)."""
         return self.H * (self.P + 1)
 
-
-def _quant(x: jnp.ndarray, grid_dtype) -> jnp.ndarray:
-    """Value-level quantization to ``grid_dtype``'s lattice, kept in x.dtype."""
-    if jnp.dtype(grid_dtype).itemsize >= jnp.dtype(x.dtype).itemsize:
-        return x
-    return x.astype(grid_dtype).astype(x.dtype)
-
-
-def _swap_last(a):
-    return jnp.swapaxes(a, -1, -2)
-
-
-# ----------------------------------------------------------------------------
-# mp_matmul: the mixed-precision GEMM with the paper's hybrid-FP8 VJP.
-# Supports a: (..., M, K) @ b: (..., K, N) with b either matching-batched or
-# unbatched (2D) — covers linear layers and attention dots without einsum.
-# On the pallas backends both the forward GEMM and the two backward GEMMs
-# (g @ w^T, x^T @ g) execute in the RedMulE kernel.
-# ----------------------------------------------------------------------------
+    def to_engine(self) -> Engine:
+        return Engine(
+            policy=self.policy, backend=self.backend,
+            block_m=self.block_m, block_n=self.block_n, block_k=self.block_k,
+            L=self.L, H=self.H, P=self.P,
+        )
 
 
 def mp_matmul(
@@ -135,111 +159,17 @@ def mp_matmul(
     *,
     backend: str | None = None,
 ):
-    """z = a @ b under the policy. a: (..., M, K); b: (..., K, N) or (K, N).
-
-    ``backend=None`` uses the ambient default (see ``use_backend``).
-    """
-    backend = _resolve_backend(backend)
-    return _mp_core(a.astype(policy.compute), b.astype(policy.compute),
-                    policy, backend)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _mp_core(a, b, policy: PrecisionPolicy, backend: str):
-    z, _ = _mp_core_fwd(a, b, policy, backend)
-    return z
-
-
-def _store_residual(x, policy: PrecisionPolicy):
-    if policy.fp8_storage:
-        return x.astype(policy.storage_fwd)  # halve residual bytes
-    return x
-
-
-def _mp_core_fwd(a, b, policy: PrecisionPolicy, backend: str):
-    if backend == "xla":
-        aq = _quant(a, policy.storage_fwd)
-        bq = _quant(b, policy.storage_fwd)
-        z = jnp.matmul(aq, bq, preferred_element_type=policy.acc)
-        z = z.astype(policy.out)
-        return z, (_store_residual(aq, policy), _store_residual(bq, policy))
-    # Pallas: operands cross HBM in the storage dtype; the kernel's cast
-    # units widen them in VMEM. Residuals are the very bytes the kernel read.
-    aq = a.astype(policy.storage_fwd)
-    bq = b.astype(policy.storage_fwd)
-    z = kernel_ops.gemm_op(
-        aq, bq, None, gop=semiring.MATMUL, policy=policy, backend=backend,
-        operand_quant=False,
-    )
-    return z, (aq, bq)
-
-
-def _sum_to_shape(x, shape):
-    """Sum out broadcast batch dims so grads match the primal shape."""
-    if x.shape == tuple(shape):
-        return x
-    extra = x.ndim - len(shape)
-    if extra > 0:
-        x = jnp.sum(x, axis=tuple(range(extra)))
-    axes = tuple(i for i, (xs, s) in enumerate(zip(x.shape, shape)) if xs != s)
-    if axes:
-        x = jnp.sum(x, axis=axes, keepdims=True)
-    return x.reshape(shape)
-
-
-def _mp_core_bwd(policy: PrecisionPolicy, backend: str, res, g):
-    aq, bq = res
-    a_shape, b_shape = aq.shape, bq.shape
-    if backend == "xla":
-        # Backward GEMMs consume the E5M2-quantized gradient (paper bwd fmt).
-        gq = _quant(g.astype(policy.compute), policy.storage_bwd)
-        aq = aq.astype(policy.compute)
-        bq = bq.astype(policy.compute)
-        da = jnp.matmul(gq, _swap_last(bq), preferred_element_type=policy.acc)
-        db = jnp.matmul(_swap_last(aq), gq, preferred_element_type=policy.acc)
-        da = _sum_to_shape(da, a_shape).astype(policy.compute)
-        db = _sum_to_shape(db, b_shape).astype(policy.compute)
-        return da, db
-
-    # Pallas backward: both GEMMs run in the RedMulE kernel with mixed
-    # storage operands — E5M2 gradient x E4M3 residual (paper Sec. 4.2.3).
-    gq = g.astype(policy.compute).astype(policy.storage_bwd)
-    da = kernel_ops.gemm_op(
-        gq, _swap_last(bq), None, gop=semiring.MATMUL, policy=policy,
-        backend=backend, operand_quant=False, out_dtype=policy.compute,
-    )
-    if bq.ndim == 2 and gq.ndim > 2:
-        # Shared weight: dW = sum_batch x_b^T g_b == (flatten rows)^T @ g.
-        # One unbatched kernel GEMM instead of a batched GEMM + reduction.
-        kdim = aq.shape[-1]
-        n = gq.shape[-1]
-        af = aq.reshape(-1, kdim)
-        gf = gq.reshape(-1, n)
-        db = kernel_ops.gemm_op(
-            _swap_last(af), gf, None, gop=semiring.MATMUL, policy=policy,
-            backend=backend, operand_quant=False, out_dtype=policy.compute,
-        )
-    else:
-        db = kernel_ops.gemm_op(
-            _swap_last(aq), gq, None, gop=semiring.MATMUL, policy=policy,
-            backend=backend, operand_quant=False, out_dtype=policy.compute,
-        )
-    da = _sum_to_shape(da, a_shape).astype(policy.compute)
-    db = _sum_to_shape(db, b_shape).astype(policy.compute)
-    return da, db
-
-
-_mp_core.defvjp(_mp_core_fwd, _mp_core_bwd)
+    """DEPRECATED: use ``Engine(policy=..., backend=...).matmul(a, b)``."""
+    _warn("mp_matmul", "Engine.matmul")
+    return _shim_engine(policy, backend).matmul(a, b)
 
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None,
            policy: PrecisionPolicy = TPU_BF16, *,
            backend: str | None = None) -> jnp.ndarray:
-    """y = x @ w (+ b) through the engine. x: (..., K), w: (K, N)."""
-    y = mp_matmul(x, w, policy, backend=backend)
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    return y
+    """DEPRECATED: use ``Engine(...).linear(x, w, b)``."""
+    _warn("linear", "Engine.linear")
+    return _shim_engine(policy, backend).linear(x, w, b)
 
 
 def gemm_op(
@@ -252,32 +182,28 @@ def gemm_op(
     config: RedMulEConfig | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
-    """Full GEMM-Op surface (paper Table 1): Z = star(Y, star_k(circ(X, W))).
+    """DEPRECATED: use ``Engine(...).gemm_op(x, w, y, op=...)``.
 
-    Semiring ops are non-differentiable here (graph-analytics use cases);
-    gradients are stopped explicitly. Differentiable training matmuls go
-    through ``mp_matmul``.
+    Unlike the old surface, semiring ops are differentiable here too (the
+    engine's tropical VJP); gradients are no longer stopped.
     """
-    gop = semiring.get(op) if isinstance(op, str) else op
-    if isinstance(policy, str):
-        policy = get_policy(policy)
+    _warn("gemm_op", "Engine.gemm_op")
     cfg = config or RedMulEConfig()
-    # Priority: explicit arg > active use_backend scope > engine config.
-    backend = _check_backend(backend or _ambient_backend or cfg.backend)
-    out = kernel_ops.gemm_op(
-        x,
-        w,
-        y,
-        gop=gop,
-        policy=policy,
-        block_m=cfg.block_m,
-        block_n=cfg.block_n,
-        block_k=cfg.block_k,
-        backend=backend,
+    # Priority: explicit arg > active ambient scope > the process-wide
+    # set_default_backend value > engine config (the old global served both
+    # of the middle roles).
+    amb = ambient_engine()
+    resolved = (
+        backend
+        or (amb.backend if amb is not None else None)
+        or _process_default_backend
+        or cfg.backend
     )
-    if not gop.is_gemm:
-        out = jax.lax.stop_gradient(out)
-    return out
+    eng = cfg.to_engine().replace(
+        backend=resolved,
+        policy=get_policy(policy) if isinstance(policy, str) else policy,
+    )
+    return eng.gemm_op(x, w, y, op=op)
 
 
 # fp8 storage helpers (KV cache / parameter compression) ----------------------

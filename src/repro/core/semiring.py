@@ -52,6 +52,19 @@ def reduce_identity(op: Op) -> float:
     return _REDUCE_IDENTITY[op]
 
 
+def finite_identity(op: Op, dtype) -> float:
+    """``reduce_identity`` clamped to ``dtype``'s finite range.
+
+    The single source of the no-inf clamp rule (docs/DESIGN.md Sec. 3):
+    e4m3fn has no inf encoding, so +/-inf identities become +/-finfo.max —
+    sound because a clamped identity only ever needs to lose (or tie)
+    against real data on the same finite grid.
+    """
+    ident = _REDUCE_IDENTITY[op]
+    fin = float(jnp.finfo(dtype).max)
+    return max(min(ident, fin), -fin)
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmOp:
     """One row of paper Table 1."""

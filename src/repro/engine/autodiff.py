@@ -1,0 +1,303 @@
+"""Differentiable cores of the engine: the hybrid-FP8 GEMM VJP and the
+tropical (semiring) VJP that makes Group-1/2 GEMM-Ops trainable.
+
+Both forward paths run through ``repro.kernels.ops.gemm_op`` on every
+backend, so one dispatch layer owns padding, batching, tile selection and
+the xla/pallas split; the engine layer owns quantization and gradients.
+
+GEMM (circ=mul, star=add) — paper Sec. 4.2.3, refs [10, 11]:
+  forward GEMMs consume E4M3 operands; backward GEMMs consume the incoming
+  gradient quantized to E5M2 plus the saved E4M3 residuals, and both
+  backward products (g @ w^T, x^T @ g) run through the same kernel path.
+
+Semiring ops (star in {min, max}) — tropical subgradients:
+  Z[m, n] = star_k circ(X[m, k], W[k, n]) is piecewise linear in its
+  inputs; the subgradient routes the cotangent to the arg-star lanes (the
+  backpointers of the underlying dynamic program). We mirror JAX's own
+  tie conventions exactly — reduction ties split the cotangent evenly
+  (``reduce_min``/``reduce_max`` rule) and ``circ`` in {min, max} splits
+  half-half at equality (``lax.min``/``lax.max``'s balanced-eq rule) — so
+  gradients check out against ``jax.grad`` of a pure-``jnp`` reference.
+  The backward pass recomputes circ-products chunk-by-chunk over K from the
+  saved storage-format residuals (never materializing (M, K, N)) and
+  selects lanes by exact equality with the saved accumulator-format
+  reduction — exact because min/max select values instead of rounding, and
+  both kernel backends compute circ in the compute dtype before widening.
+
+The incoming cotangent crosses "memory" in the policy's backward storage
+format (E5M2 under hybrid FP8) on the semiring path too, mirroring the
+GEMM rule, so training sees one consistent gradient format engine-wide.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring
+from repro.core.semiring import GemmOp, Op
+from repro.kernels import ops as kernel_ops
+
+# K-chunk of the tropical backward recompute: bounds the live selection
+# block at (batch, M, _BWD_K_CHUNK, N) in the accumulator dtype.
+_BWD_K_CHUNK = 64
+
+
+def _swap_last(a):
+    return jnp.swapaxes(a, -1, -2)
+
+
+def _sum_to_shape(x, shape):
+    """Sum out broadcast batch dims so grads match the primal shape."""
+    if x.shape == tuple(shape):
+        return x
+    extra = x.ndim - len(shape)
+    if extra > 0:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(i for i, (xs, s) in enumerate(zip(x.shape, shape)) if xs != s)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x.reshape(shape)
+
+
+def _kernel_gemm(x, w, y, gop: GemmOp, engine, out_dtype=None):
+    """One dispatch into the kernel layer with the engine's settings.
+
+    Operands arrive already quantized to their storage formats
+    (``operand_quant=False``): the engine layer owns the cast points so the
+    VJPs can reuse the exact bytes the kernel consumed.
+    """
+    return kernel_ops.gemm_op(
+        x, w, y,
+        gop=gop, policy=engine.policy,
+        block_m=engine.block_m, block_n=engine.block_n, block_k=engine.block_k,
+        backend=engine.backend, operand_quant=False, out_dtype=out_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# mp_matmul: the mixed-precision GEMM with the paper's hybrid-FP8 VJP.
+# Supports a: (..., M, K) @ b: (..., K, N) with b either matching-batched or
+# unbatched (2D) — covers linear layers and attention dots without einsum.
+# ---------------------------------------------------------------------------
+
+
+def mp_matmul(a: jnp.ndarray, b: jnp.ndarray, engine) -> jnp.ndarray:
+    """z = a @ b under the engine's policy, on the engine's backend."""
+    pol = engine.policy
+    return _mp_core(a.astype(pol.compute), b.astype(pol.compute), engine)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mp_core(a, b, engine):
+    z, _ = _mp_core_fwd(a, b, engine)
+    return z
+
+
+def _mp_core_fwd(a, b, engine):
+    # Operands cross HBM in the storage dtype (fp8 halves residual bytes);
+    # the kernel's cast units widen them in VMEM. Residuals are the very
+    # bytes the kernel read.
+    pol = engine.policy
+    aq = a.astype(pol.storage_fwd)
+    bq = b.astype(pol.storage_fwd)
+    z = _kernel_gemm(aq, bq, None, semiring.MATMUL, engine)
+    return z, (aq, bq)
+
+
+def _mp_core_bwd(engine, res, g):
+    # Both backward GEMMs run in the engine with mixed storage operands —
+    # E5M2 gradient x E4M3 residual (paper Sec. 4.2.3).
+    pol = engine.policy
+    aq, bq = res
+    gq = g.astype(pol.compute).astype(pol.storage_bwd)
+    da = _kernel_gemm(gq, _swap_last(bq), None, semiring.MATMUL, engine,
+                      out_dtype=pol.compute)
+    if bq.ndim == 2 and gq.ndim > 2:
+        # Shared weight: dW = sum_batch x_b^T g_b == (flatten rows)^T @ g.
+        # One unbatched GEMM instead of a batched GEMM + reduction.
+        kdim = aq.shape[-1]
+        n = gq.shape[-1]
+        db = _kernel_gemm(
+            _swap_last(aq.reshape(-1, kdim)), gq.reshape(-1, n), None,
+            semiring.MATMUL, engine, out_dtype=pol.compute,
+        )
+    else:
+        db = _kernel_gemm(_swap_last(aq), gq, None, semiring.MATMUL, engine,
+                          out_dtype=pol.compute)
+    da = _sum_to_shape(da, aq.shape).astype(pol.compute)
+    db = _sum_to_shape(db, bq.shape).astype(pol.compute)
+    return da, db
+
+
+_mp_core.defvjp(_mp_core_fwd, _mp_core_bwd)
+
+
+# GEMM with a fused Y operand: Z = X @ W + Y. Y folds into the kernel's
+# accumulator init (one rounding, same as the pre-Engine kernel path) and
+# is differentiable (dY = the unquantized cotangent, batch-summed).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mp_core_y(a, b, y, engine):
+    z, _ = _mp_core_y_fwd(a, b, y, engine)
+    return z
+
+
+def _mp_core_y_fwd(a, b, y, engine):
+    pol = engine.policy
+    aq = a.astype(pol.storage_fwd)
+    bq = b.astype(pol.storage_fwd)
+    z = _kernel_gemm(aq, bq, y, semiring.MATMUL, engine)
+    return z, (aq, bq, y)
+
+
+def _mp_core_y_bwd(engine, res, g):
+    aq, bq, y = res
+    da, db = _mp_core_bwd(engine, (aq, bq), g)
+    dy = _sum_to_shape(g.astype(engine.policy.acc), y.shape).astype(y.dtype)
+    return da, db, dy
+
+
+_mp_core_y.defvjp(_mp_core_y_fwd, _mp_core_y_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Tropical VJP: star in {min, max} reductions with subgradient routing.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _tropical_core(x, w, gop: GemmOp, engine):
+    z, _ = _tropical_fwd(x, w, gop, engine)
+    return z
+
+
+def _tropical_fwd(x, w, gop: GemmOp, engine):
+    pol = engine.policy
+    xq = x.astype(pol.storage_fwd)
+    wq = w.astype(pol.storage_fwd)
+    # Accumulator-format output: min/max select (never round), so the saved
+    # reduction compares bit-exactly against the backward recompute.
+    r = _kernel_gemm(xq, wq, None, gop, engine, out_dtype=pol.acc)
+    return r, (xq, wq, r)
+
+
+def _circ_factors(circ: Op, xe, we, acc):
+    """(d circ/dx, d circ/dw) at broadcast operands xe (...,M,c,1) and
+    we (...,c,N). min/max use lax's balanced-eq convention: ties 0.5/0.5."""
+    if circ is Op.ADD:
+        return 1.0, 1.0
+    if circ is Op.MUL:
+        return we.astype(acc), xe.astype(acc)
+    half = (xe == we).astype(acc) * 0.5
+    if circ is Op.MIN:
+        fx = (xe < we).astype(acc) + half
+    else:  # Op.MAX
+        fx = (xe > we).astype(acc) + half
+    return fx, 1.0 - fx
+
+
+def _tropical_bwd(gop: GemmOp, engine, res, g):
+    pol = engine.policy
+    xq, wq, r = res
+    x_shape, w_shape = xq.shape, wq.shape
+    xc = xq.astype(pol.compute)
+    wc = wq.astype(pol.compute)
+    # Gradient storage format on the way in, accumulator format for routing.
+    gq = g.astype(pol.compute).astype(pol.storage_bwd).astype(pol.acc)
+
+    m, k = xc.shape[-2:]
+    n = wc.shape[-1]
+    batch = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
+    xb = jnp.broadcast_to(xc, batch + (m, k))
+    w_shared = wc.ndim == 2
+    wb = wc if w_shared else jnp.broadcast_to(wc, batch + (k, n))
+    rb = jnp.broadcast_to(r, batch + (m, n))
+    gb = jnp.broadcast_to(gq, batch + (m, n))
+
+    c = min(_BWD_K_CHUNK, k)
+    s = -(-k // c)
+    kp = s * c
+    if kp != k:
+        # Zero-fill is safe: padded lanes are masked out by the k-index.
+        xb = jnp.pad(xb, [(0, 0)] * (xb.ndim - 1) + [(0, kp - k)])
+        wb = jnp.pad(wb, [(0, 0)] * (wb.ndim - 2) + [(0, kp - k), (0, 0)])
+    xs = jnp.moveaxis(xb.reshape(*xb.shape[:-1], s, c), -2, 0)  # (S,*B,M,c)
+    ws = jnp.moveaxis(wb.reshape(*wb.shape[:-2], s, c, n), -3, 0)  # (S,[*B],c,N)
+    kidx = jnp.arange(kp).reshape(s, c)
+
+    acc = pol.acc
+    circ = semiring.op_fn(gop.circ)
+
+    def _select(xi, wi, ki):
+        xe = xi[..., :, :, None]  # (..., M, c, 1)
+        we = wi[..., None, :, :]  # (..., 1, c, N)
+        prod = circ(xe, we).astype(acc)  # (..., M, c, N)
+        valid = (ki < k)[:, None]  # (c, 1) -> broadcasts over (..., M, c, N)
+        sel = (prod == rb[..., :, None, :]) & valid
+        return xe, we, sel.astype(acc)
+
+    # Pass 1: count arg-star lanes per (m, n) so ties split the cotangent
+    # evenly (JAX's reduce_min/reduce_max convention).
+    def count_step(cnt, xs_):
+        xi, wi, ki = xs_
+        _, _, sel = _select(xi, wi, ki)
+        return cnt + jnp.sum(sel, axis=-2), None
+
+    cnt, _ = jax.lax.scan(
+        count_step, jnp.zeros(batch + (m, n), acc), (xs, ws, kidx)
+    )
+    weight = gb / jnp.maximum(cnt, 1.0)  # (*B, M, N)
+
+    # Pass 2: route weight to the selected lanes through d circ.
+    def grad_step(_, xs_):
+        xi, wi, ki = xs_
+        xe, we, sel = _select(xi, wi, ki)
+        contrib = sel * weight[..., :, None, :]  # (*B, M, c, N)
+        fx, fw = _circ_factors(gop.circ, xe, we, acc)
+        dx_c = jnp.sum(contrib * fx, axis=-1)  # (*B, M, c)
+        dw_c = jnp.sum(contrib * fw, axis=-3)  # (*B, c, N)
+        return None, (dx_c, dw_c)
+
+    _, (dxs, dws) = jax.lax.scan(grad_step, None, (xs, ws, kidx))
+    dx = jnp.moveaxis(dxs, 0, -2).reshape(*batch, m, kp)[..., :k]
+    dw = jnp.moveaxis(dws, 0, -3).reshape(*batch, kp, n)[..., :k, :]
+    dx = _sum_to_shape(dx, x_shape).astype(pol.compute)
+    dw = _sum_to_shape(dw, w_shape).astype(pol.compute)
+    return dx, dw
+
+
+_tropical_core.defvjp(_tropical_fwd, _tropical_bwd)
+
+
+# ---------------------------------------------------------------------------
+# gemm_op: the full differentiable Table 1 surface.
+# ---------------------------------------------------------------------------
+
+
+def gemm_op(x, w, y, op, engine) -> jnp.ndarray:
+    """Z = star(Y, star_k(circ(X, W))), differentiable in x, w and y.
+
+    For the GEMM pair, Y folds into the kernel's accumulator init (one
+    rounding; dY = the cotangent). For semiring ops the Y combination runs
+    outside the custom VJP with plain ``jnp`` star ops (valid by
+    associativity), so JAX's own rules route the cotangent between Y and
+    the reduction.
+    """
+    gop = semiring.get(op) if isinstance(op, str) else op
+    pol = engine.policy
+    if gop.is_gemm:
+        if y is None:
+            return mp_matmul(x, w, engine)
+        return _mp_core_y(
+            x.astype(pol.compute), w.astype(pol.compute), y, engine
+        )
+    r = _tropical_core(
+        x.astype(pol.compute), w.astype(pol.compute), gop, engine
+    )
+    if y is not None:
+        r = semiring.op_fn(gop.star)(y.astype(r.dtype), r)
+    return r.astype(pol.out)

@@ -1,0 +1,69 @@
+"""Semiring closure: the fixpoint A* under any Table 1 semiring.
+
+One relaxation step of the classic path problems is a GEMM-Op square:
+``D <- star(D, D circ-star D)``. Starting from the adjacency matrix with the
+semiring's *multiplicative* identity on the diagonal (the empty path: 0 for
+min-plus APSP, +inf for max-min capacity, 1 for max-mul reliability),
+repeated squaring converges to the closure in at most ceil(log2(V-1))
+engine calls — all-pairs shortest paths, minimum spanning bottleneck,
+maximum capacity and reliability become one library call instead of the
+hand-rolled Python loop the examples used to carry.
+
+The loop is a ``jax.lax.while_loop`` with an early fixpoint exit (min/max
+lattices reach their fixpoint exactly, so ``new == d`` is a sound test),
+which keeps the traced program O(1) in V and stops as soon as the graph's
+true diameter is covered. ``while_loop`` is forward-only: the closure is a
+graph-analytics primitive, not a training op — differentiate individual
+``Engine.gemm_op`` relaxation steps instead (see examples/viterbi_decode.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semiring
+from repro.core.semiring import GemmOp
+
+
+def closure(engine, a: jnp.ndarray, op: str | GemmOp = "apsp", *,
+            max_steps: int | None = None,
+            include_diagonal: bool = True) -> jnp.ndarray:
+    """A*: repeated-squaring fixpoint of ``a`` under the op's semiring.
+
+    a: (..., V, V) adjacency / score matrix; missing edges should carry the
+    star identity (e.g. a large-but-representable "infinity" for APSP).
+    ``include_diagonal`` seeds the diagonal with the circ identity (the
+    empty path) before iterating; pass False if ``a`` already carries it.
+    Returns the closure in the engine policy's output dtype.
+    """
+    gop = semiring.get(op) if isinstance(op, str) else op
+    v = a.shape[-1]
+    if a.shape[-2] != v:
+        raise ValueError(f"closure needs a square matrix, got {a.shape}")
+
+    pol = engine.policy
+    d0 = a.astype(pol.out)
+    if include_diagonal:
+        # The circ identity: circ(e, x) == x, i.e. the weight of staying put
+        # (clamped to the dtype's finite range — e4m3fn has no inf).
+        ident = semiring.finite_identity(gop.circ, d0.dtype)
+        eye = jnp.eye(v, dtype=bool)
+        d0 = jnp.where(eye, jnp.asarray(ident, d0.dtype), d0)
+    if max_steps is None:
+        max_steps = max(1, math.ceil(math.log2(max(v - 1, 2))) + 1)
+
+    def cond(state):
+        i, _, done = state
+        return (i < max_steps) & jnp.logical_not(done)
+
+    def body(state):
+        i, d, _ = state
+        new = engine.gemm_op(d, d, d, op=gop)
+        return i + 1, new, jnp.all(new == d)
+
+    _, d, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), d0, jnp.asarray(False))
+    )
+    return d

@@ -3,7 +3,7 @@
 The Pallas kernel requires block-multiple shapes; this module implements the
 paper's "leftover" handling in software: ragged dims are padded to the tile
 grid with values that are absorbed by the (circ, star) pair, computed, and
-sliced back. See ``semiring.pad_value_for`` discussion + DESIGN.md (clock
+sliced back. See ``semiring.pad_value_for`` discussion + docs/DESIGN.md Sec. 3 (clock
 gating has no TPU analogue; padding-waste is the software observable).
 
 Batching: ``gemm_op`` accepts arbitrary leading batch dims on x (and
@@ -32,15 +32,9 @@ def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _finite_identity(op: Op, dtype) -> float:
-    """Star identity, clamped to the dtype's finite range (e4m3fn has no inf)."""
-    ident = semiring.reduce_identity(op)
-    fin = float(jnp.finfo(dtype).max)
-    if ident == float("inf"):
-        return fin
-    if ident == float("-inf"):
-        return -fin
-    return ident
+# Star identity clamped to the dtype's finite range (e4m3fn has no inf);
+# the rule lives in one place: repro.core.semiring.finite_identity.
+_finite_identity = semiring.finite_identity
 
 
 def _pad_last2(a, rows: int, cols: int, fill):
@@ -57,7 +51,7 @@ def _pad_last2(a, rows: int, cols: int, fill):
 def _pad_operands(x, w, y, gop: GemmOp, bm: int, bn: int, bk: int):
     """Pad (x, w, y) so padded K-lanes contribute the star identity.
 
-    Padding rules per circ (DESIGN/ops notes):
+    Padding rules per circ (docs/DESIGN.md Sec. 3):
       mul: pad x-lanes with 0 (GEMM) or +/-"inf" and w-lanes with 1 (semiring)
       add: pad both with +/-"inf"/2 (sum hits the identity)
       min/max: pad both with the star identity
@@ -197,7 +191,10 @@ def _pallas_gemm_op(
         x = x.astype(policy.storage_fwd)
         w = w.astype(policy.storage_fwd)
     if y is not None:
-        y = y.astype(out_dtype)
+        # Y folds into the accumulator init: carry it at accumulator
+        # precision so Z = star(Y, ...) rounds once at the output cast
+        # (matches the XLA path and the oracle — no pre-round of Y).
+        y = y.astype(policy.acc)
 
     w_shared = w.ndim == 2 or all(d == 1 for d in batch_w)
     if w_shared:

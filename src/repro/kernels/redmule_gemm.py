@@ -1,6 +1,6 @@
 """RedMulE GEMM-Op Pallas kernel (TPU target, interpret-mode validated).
 
-TPU mapping of the paper's datapath (DESIGN.md Sec. 2):
+TPU mapping of the paper's datapath (docs/DESIGN.md Sec. 2):
 
   - The L x H CE array with P pipeline registers becomes a (block_m, block_n)
     VMEM output tile; the Z-buffer feedback/accumulate loop becomes the K grid

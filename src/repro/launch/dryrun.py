@@ -100,6 +100,10 @@ def lower_cell(arch: str, shape: str, mesh, *, args=None):
     meta = {
         "arch": arch, "shape": shape, "kind": kind,
         "seq": seq, "batch": batch,
+        "engine": {
+            "policy": model.engine.policy.name,
+            "backend": model.engine.backend,
+        },
         "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
         "n_params": int(
             sum(math.prod(leaf.shape) for leaf in jax.tree.leaves(params_shape))

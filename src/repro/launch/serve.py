@@ -23,6 +23,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument(
+        "--backend", choices=("", "xla", "pallas", "pallas_interpret"),
+        default="", help="GEMM engine backend override (default: config)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -31,7 +35,9 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     batch = make_batch(cfg, args.batch, args.prompt_len, jax.random.PRNGKey(1))
 
-    prefill_step, decode_step = make_serve_steps(model)
+    eng = model.engine.with_backend(args.backend) if args.backend else model.engine
+    print(f"engine: policy={eng.policy.name} backend={eng.backend}")
+    prefill_step, decode_step = make_serve_steps(model, engine=eng)
     max_len = args.prompt_len + args.gen
     prefill = jax.jit(lambda p, b: prefill_step(p, b, max_len))
     decode = jax.jit(decode_step)

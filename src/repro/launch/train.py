@@ -82,6 +82,9 @@ def main(argv=None):
     dp_axes, tp, n_dp = dp_axes_of(mesh), tp_size_of(mesh), n_dp_of(mesh)
     mesh_ctx = MeshCtx(mesh=mesh, dp_axes=dp_axes, ep_axis="model")
     model = build(cfg, mesh_ctx)
+    # cfg.policy/cfg.backend (incl. the CLI overrides above) became the
+    # model's Engine; every GEMM in the traced step runs on it.
+    print(f"engine: policy={model.engine.policy.name} backend={model.engine.backend}")
 
     opt = AdamW(lr=cosine_schedule(args.lr, args.warmup, args.steps))
     params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(args.seed)))

@@ -1,8 +1,8 @@
 """GQA attention with online-softmax KV chunking.
 
 One implementation serves training, prefill and decode:
-  - scores/values matmuls go through the RedMulE engine (``mp_matmul``), so
-    attention inherits the hybrid-FP8 policy like every other GEMM;
+  - scores/values matmuls go through the RedMulE ``Engine``, so attention
+    inherits the hybrid-FP8 policy like every other GEMM;
   - the KV axis is processed in chunks with an online softmax (flash-style),
     bounding memory at O(S * chunk) — required for the 32k-prefill shapes;
   - GQA via a group axis (no materialized head repeat);
@@ -21,8 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
-from repro.core.redmule import mp_matmul
+from repro.engine import Engine, as_engine
 from repro.models import common
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
@@ -94,7 +93,7 @@ def _attn_constraints(mesh_ctx, b, hkv, g, sq, sk=0):
     return (NamedSharding(mesh, q_spec), NamedSharding(mesh, kv_spec))
 
 
-def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, policy,
+def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, engine: Engine,
                       causal=True, mesh_ctx=None):
     """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd). Online softmax over Sk chunks.
 
@@ -132,7 +131,7 @@ def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, policy,
     def step(carry, xs):
         m_prev, l_prev, acc = carry
         kc, vc, kp = xs  # (B, Hkv, C, hd) x2, (C,)
-        s = mp_matmul(qh, jnp.swapaxes(kc, -1, -2)[:, :, None], policy)
+        s = engine.matmul(qh, jnp.swapaxes(kc, -1, -2)[:, :, None])
         s = s.astype(jnp.float32) * scale
         s = common.softcap(s, cfg.softcap)
         valid = kp[None, :] != POS_SENTINEL  # (1, C)
@@ -147,7 +146,7 @@ def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, policy,
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[..., None])
         l_new = l_prev * alpha + jnp.sum(p, axis=-1)
-        pv = mp_matmul(p.astype(q.dtype), vc[:, :, None], policy).astype(jnp.float32)
+        pv = engine.matmul(p.astype(q.dtype), vc[:, :, None]).astype(jnp.float32)
         acc = acc * alpha[..., None] + pv
         return (m_new, l_new, acc), None
 
@@ -173,7 +172,7 @@ def apply(
     x,
     positions,
     cfg: AttnConfig,
-    policy: PrecisionPolicy,
+    engine: Engine,
     *,
     cache: dict | None = None,
     cross_kv: tuple | None = None,
@@ -187,11 +186,12 @@ def apply(
     boundary (always true: prefill starts at 0, decode writes length 1).
     cross_kv: precomputed (k, v, k_pos) for encoder-decoder cross-attention.
     """
+    engine = as_engine(engine)
     b, s, _ = x.shape
-    q = _split_heads(common.dense_apply(params["q"], x, policy), cfg.n_heads, cfg.head_dim)
+    q = _split_heads(common.dense_apply(params["q"], x, engine), cfg.n_heads, cfg.head_dim)
     if cross_kv is None:
-        k = _split_heads(common.dense_apply(params["k"], x, policy), cfg.n_kv_heads, cfg.head_dim)
-        v = _split_heads(common.dense_apply(params["v"], x, policy), cfg.n_kv_heads, cfg.head_dim)
+        k = _split_heads(common.dense_apply(params["k"], x, engine), cfg.n_kv_heads, cfg.head_dim)
+        v = _split_heads(common.dense_apply(params["v"], x, engine), cfg.n_kv_heads, cfg.head_dim)
         pos2d = jnp.broadcast_to(positions[None, :], (b, s))
         q = common.apply_rope(q, pos2d, cfg.rope_theta, cfg.rope_fraction)
         k = common.apply_rope(k, pos2d, cfg.rope_theta, cfg.rope_fraction)
@@ -232,8 +232,8 @@ def apply(
                 cache["pos"], positions, slot, axis=0
             )
             new_cache = {"k": ck, "v": cv, "pos": cpos, "index": cache["index"] + s}
-            k = ck.astype(policy.compute)
-            v = cv.astype(policy.compute)
+            k = ck.astype(engine.policy.compute)
+            v = cv.astype(engine.policy.compute)
             k_pos = cpos
     elif cross_kv is not None:
         k_pos = cross_pos
@@ -241,11 +241,11 @@ def apply(
         k_pos = positions
 
     out = _online_attention(
-        q, k, v, positions, k_pos, cfg, policy,
+        q, k, v, positions, k_pos, cfg, engine,
         causal=causal and cross_kv is None, mesh_ctx=mesh_ctx,
     )
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
-    out = common.dense_apply(params["o"], out, policy)
+    out = common.dense_apply(params["o"], out, engine)
     return out, new_cache
 
 

@@ -1,7 +1,9 @@
 """Shared model building blocks. Functional style: params are dict pytrees.
 
-All matrix products route through ``repro.core.redmule`` so the paper's
-mixed-precision engine is the single GEMM substrate of every architecture.
+All matrix products route through a :class:`repro.engine.Engine` so the
+paper's mixed-precision engine is the single GEMM substrate of every
+architecture. Layer entry points accept an Engine (or, for compatibility,
+a bare PrecisionPolicy coerced via ``as_engine``).
 """
 from __future__ import annotations
 
@@ -11,9 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
-from repro.core.redmule import linear as _rm_linear
-from repro.core.redmule import mp_matmul
+from repro.engine import Engine, as_engine
 
 Params = dict[str, Any]
 
@@ -24,8 +24,8 @@ def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | No
     return {"w": w.astype(dtype)}
 
 
-def dense_apply(p: Params, x, policy: PrecisionPolicy, backend: str | None = None):
-    return _rm_linear(x, p["w"], p.get("b"), policy=policy, backend=backend)
+def dense_apply(p: Params, x, engine: Engine):
+    return as_engine(engine).linear(x, p["w"], p.get("b"))
 
 
 def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
@@ -103,6 +103,6 @@ def embed_apply(p: Params, tokens):
     return jnp.take(p["table"], tokens, axis=0)
 
 
-def unembed_apply(p: Params, x, policy: PrecisionPolicy, backend: str | None = None):
+def unembed_apply(p: Params, x, engine: Engine):
     """Tied unembedding: logits = x @ table.T through the engine."""
-    return mp_matmul(x, p["table"].T, policy, backend=backend)
+    return as_engine(engine).matmul(x, p["table"].T)

@@ -1,10 +1,10 @@
-"""Feed-forward blocks (gated + plain), all GEMMs via the RedMulE engine."""
+"""Feed-forward blocks (gated + plain), all GEMMs via the RedMulE Engine."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
+from repro.engine import Engine, as_engine
 from repro.models import common
 
 
@@ -19,16 +19,17 @@ def init(key, d_model: int, d_ff: int, kind: str = "swiglu", dtype=jnp.bfloat16)
     return p
 
 
-def apply(params, x, kind: str, policy: PrecisionPolicy):
-    up = common.dense_apply(params["up"], x, policy)
+def apply(params, x, kind: str, engine: Engine):
+    engine = as_engine(engine)
+    up = common.dense_apply(params["up"], x, engine)
     if kind == "swiglu":
-        h = jax.nn.silu(common.dense_apply(params["gate"], x, policy)) * up
+        h = jax.nn.silu(common.dense_apply(params["gate"], x, engine)) * up
     elif kind == "geglu":
-        h = common.gelu(common.dense_apply(params["gate"], x, policy)) * up
+        h = common.gelu(common.dense_apply(params["gate"], x, engine)) * up
     elif kind == "gelu":
         h = common.gelu(up)
     elif kind == "relu":
         h = jax.nn.relu(up)
     else:
         raise ValueError(kind)
-    return common.dense_apply(params["down"], h, policy)
+    return common.dense_apply(params["down"], h, engine)

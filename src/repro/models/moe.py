@@ -9,9 +9,9 @@
              expert, gathers a fixed-capacity buffer per *local* expert, runs
              the expert FFN, and scatter-adds the gated outputs; a single
              psum over 'model' combines shards. No all-to-all — comm is one
-             activation-sized all-reduce (DESIGN.md Sec. 5).
+             activation-sized all-reduce (docs/DESIGN.md).
 
-Expert GEMMs go through the RedMulE engine like every other projection.
+Expert GEMMs go through the RedMulE Engine like every other projection.
 """
 from __future__ import annotations
 
@@ -22,10 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.precision import PrecisionPolicy
-from repro.core.redmule import mp_matmul
 from repro.distrib import compat
 from repro.distrib.compat import shard_map
+from repro.engine import Engine, as_engine
 from repro.models import common
 
 
@@ -66,15 +65,16 @@ def _router(params, x2, cfg: MoEConfig):
     return top_p, top_i, aux
 
 
-def _expert_ffn(up_w, gate_w, down_w, x, cfg: MoEConfig, policy):
-    h = mp_matmul(x, up_w, policy)
-    g = mp_matmul(x, gate_w, policy)
+def _expert_ffn(up_w, gate_w, down_w, x, cfg: MoEConfig, engine):
+    h = engine.matmul(x, up_w)
+    g = engine.matmul(x, gate_w)
     h = (jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
          if cfg.act == "swiglu" else common.gelu(g) * h)
-    return mp_matmul(h, down_w, policy)
+    return engine.matmul(h, down_w)
 
 
-def apply_dense(params, x, cfg: MoEConfig, policy: PrecisionPolicy):
+def apply_dense(params, x, cfg: MoEConfig, engine: Engine):
+    engine = as_engine(engine)
     b, s, d = x.shape
     e, f = cfg.n_experts, cfg.d_ff
     x2 = x.reshape(b * s, d)
@@ -84,11 +84,11 @@ def apply_dense(params, x, cfg: MoEConfig, policy: PrecisionPolicy):
         jax.nn.one_hot(top_i, e, dtype=jnp.float32) * top_p[..., None], axis=1
     )
     # All experts as one wide GEMM: (T, d) @ (d, E*f).
-    up_all = mp_matmul(x2, params["up"].transpose(1, 0, 2).reshape(d, e * f), policy)
-    gate_all = mp_matmul(x2, params["gate"].transpose(1, 0, 2).reshape(d, e * f), policy)
+    up_all = engine.matmul(x2, params["up"].transpose(1, 0, 2).reshape(d, e * f))
+    gate_all = engine.matmul(x2, params["gate"].transpose(1, 0, 2).reshape(d, e * f))
     h = jax.nn.silu(gate_all.astype(jnp.float32)).astype(up_all.dtype) * up_all
     h = h.reshape(-1, e, f) * gates[..., None].astype(h.dtype)
-    y = mp_matmul(h.reshape(-1, e * f), params["down"].reshape(e * f, d), policy)
+    y = engine.matmul(h.reshape(-1, e * f), params["down"].reshape(e * f, d))
     return y.reshape(b, s, d), aux
 
 
@@ -96,7 +96,7 @@ def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _ep_local(params, x, cfg: MoEConfig, policy: PrecisionPolicy, ep_axis: str):
+def _ep_local(params, x, cfg: MoEConfig, engine: Engine, ep_axis: str):
     """Per-device body under shard_map. x: (B_l, S, d) local tokens
     (replicated over the 'model' axis); expert params sharded over ep_axis.
     """
@@ -134,7 +134,7 @@ def _ep_local(params, x, cfg: MoEConfig, policy: PrecisionPolicy, ep_axis: str):
         tok = jnp.where(valid, tok, 0)
         xin = jnp.take(x2, tok, axis=0)  # (cap, d)
         yj = _expert_ffn(
-            params["up"][j], params["gate"][j], params["down"][j], xin, cfg, policy
+            params["up"][j], params["gate"][j], params["down"][j], xin, cfg, engine
         ).astype(jnp.float32)
         yj = yj * (pj * valid)[:, None]
         out = out.at[tok].add(jnp.where(valid[:, None], yj, 0.0))
@@ -146,9 +146,11 @@ def _ep_local(params, x, cfg: MoEConfig, policy: PrecisionPolicy, ep_axis: str):
     return out.reshape(b, s, d), aux
 
 
-def apply_ep(params, x, cfg: MoEConfig, policy: PrecisionPolicy, mesh, dp_axes, ep_axis):
+def apply_ep(params, x, cfg: MoEConfig, engine: Engine, mesh, dp_axes, ep_axis):
     """Expert-parallel MoE. Experts sharded over ``ep_axis`` of ``mesh``."""
-    body = functools.partial(_ep_local, cfg=cfg, policy=policy, ep_axis=ep_axis)
+    body = functools.partial(
+        _ep_local, cfg=cfg, engine=as_engine(engine), ep_axis=ep_axis
+    )
     pspec = {
         "router": {"w": P()},
         "up": P(ep_axis),
@@ -165,8 +167,8 @@ def apply_ep(params, x, cfg: MoEConfig, policy: PrecisionPolicy, mesh, dp_axes, 
     return y, aux
 
 
-def apply(params, x, cfg: MoEConfig, policy: PrecisionPolicy, *, mesh=None,
+def apply(params, x, cfg: MoEConfig, engine: Engine, *, mesh=None,
           dp_axes=None, ep_axis=None):
     if cfg.impl == "ep" and mesh is not None and ep_axis is not None:
-        return apply_ep(params, x, cfg, policy, mesh, dp_axes, ep_axis)
-    return apply_dense(params, x, cfg, policy)
+        return apply_ep(params, x, cfg, engine, mesh, dp_axes, ep_axis)
+    return apply_dense(params, x, cfg, engine)

@@ -12,7 +12,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
+from repro.engine import Engine, as_engine
 from repro.models import common
 
 _C = 8.0  # Griffin's recurrence-gate exponent
@@ -52,13 +52,13 @@ def _causal_conv(x, w, state=None):
     return y, new_state
 
 
-def _gates(params, xr, policy):
+def _gates(params, xr, engine):
     """(a_t, gated input) for the linear recurrence, computed in fp32."""
     rgate = jax.nn.sigmoid(
-        common.dense_apply(params["gate_a"], xr, policy).astype(jnp.float32)
+        common.dense_apply(params["gate_a"], xr, engine).astype(jnp.float32)
     )
     igate = jax.nn.sigmoid(
-        common.dense_apply(params["gate_x"], xr, policy).astype(jnp.float32)
+        common.dense_apply(params["gate_x"], xr, engine).astype(jnp.float32)
     )
     log_a = -_C * jax.nn.softplus(params["lam"]) * rgate  # (B, S, R)
     a = jnp.exp(log_a)
@@ -68,15 +68,16 @@ def _gates(params, xr, policy):
     return a, b
 
 
-def apply_scan(params, x, cfg: RGLRUConfig, policy: PrecisionPolicy):
+def apply_scan(params, x, cfg: RGLRUConfig, engine: Engine):
     """Training/prefill path: parallel associative scan over time.
 
     Returns (y, final_state) so prefill reuses the training path.
     """
-    gate = common.gelu(common.dense_apply(params["in_gate"], x, policy))
-    xr_raw = common.dense_apply(params["in_x"], x, policy)
+    engine = as_engine(engine)
+    gate = common.gelu(common.dense_apply(params["in_gate"], x, engine))
+    xr_raw = common.dense_apply(params["in_x"], x, engine)
     xr, conv_state = _causal_conv(xr_raw, params["conv_w"])
-    a, b = _gates(params, xr, policy)
+    a, b = _gates(params, xr, engine)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -85,20 +86,21 @@ def apply_scan(params, x, cfg: RGLRUConfig, policy: PrecisionPolicy):
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = (h.astype(x.dtype)) * gate
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     state = {"h": h[:, -1], "conv": conv_state.astype(jnp.bfloat16)}
     return out, state
 
 
-def apply_decode(params, x, state, cfg: RGLRUConfig, policy: PrecisionPolicy):
+def apply_decode(params, x, state, cfg: RGLRUConfig, engine: Engine):
     """Single-step decode. x: (B, 1, D); state: {"h": (B,R) f32, "conv": (B,3,R)}."""
-    gate = common.gelu(common.dense_apply(params["in_gate"], x, policy))
-    xr = common.dense_apply(params["in_x"], x, policy)
+    engine = as_engine(engine)
+    gate = common.gelu(common.dense_apply(params["in_gate"], x, engine))
+    xr = common.dense_apply(params["in_x"], x, engine)
     xr, conv_state = _causal_conv(xr, params["conv_w"], state["conv"])
-    a, b = _gates(params, xr, policy)
+    a, b = _gates(params, xr, engine)
     h = a[:, 0] * state["h"] + b[:, 0]
     y = h[:, None, :].astype(x.dtype) * gate
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
 
 

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.precision import PrecisionPolicy, as_dtype, get_policy
+from repro.core.precision import as_dtype
+from repro.engine import Engine, as_engine
 from repro.models import attention, common, ffn, moe, rglru, xlstm
 from repro.models.attention import AttnConfig
 
@@ -55,12 +56,18 @@ def _dp_size(mc: MeshCtx) -> int:
 
 
 class Transformer:
-    def __init__(self, cfg: ModelConfig, mesh_ctx: MeshCtx | None = None):
+    def __init__(self, cfg: ModelConfig, mesh_ctx: MeshCtx | None = None,
+                 engine: Engine | None = None):
         self.cfg = cfg
-        self.policy: PrecisionPolicy = get_policy(cfg.policy)
-        # GEMM engine backend (xla | pallas | pallas_interpret) — applied by
-        # the step factories in repro.training via redmule.use_backend.
-        self.backend: str = getattr(cfg, "backend", "xla")
+        # The model's engine: numerics (policy) + execution (backend, tiles)
+        # in one immutable handle. Step factories may pass an override engine
+        # per traced step (repro.training); entry points accept engine=.
+        self.engine: Engine = (
+            as_engine(engine) if engine is not None
+            else Engine(policy=cfg.policy, backend=getattr(cfg, "backend", "xla"))
+        )
+        self.policy = self.engine.policy
+        self.backend = self.engine.backend
         self.mesh_ctx = mesh_ctx or MeshCtx()
         # fp8 parameter storage (paper: fp8 across "memory", 16-bit compute).
         self.dtype = jnp.float8_e4m3fn if cfg.fp8_params else self.policy.compute
@@ -191,8 +198,8 @@ class Transformer:
 
     # -- block application ---------------------------------------------------
     def _apply_block(
-        self, kind, p, x, positions, *, cache=None, enc_out=None, enc_pos=None,
-        causal=True, decode=False,
+        self, kind, p, x, positions, engine, *, cache=None, enc_out=None,
+        enc_pos=None, causal=True, decode=False,
     ):
         cfg = self.cfg
         new_cache = {} if cache is not None else None
@@ -200,7 +207,7 @@ class Transformer:
         if kind in ("attn", "attn_local"):
             acfg = self.attn_cfg(kind)
             h, ac = attention.apply(
-                p["attn"], h, positions, acfg, self.policy,
+                p["attn"], h, positions, acfg, engine,
                 cache=None if cache is None else cache["attn"],
                 causal=causal, mesh_ctx=self.mesh_ctx,
             )
@@ -208,23 +215,23 @@ class Transformer:
                 new_cache["attn"] = ac
         elif kind == "mlstm":
             if decode:
-                h, st = xlstm.mlstm_decode(p["cell"], h, cache["state"], self.xl_cfg, self.policy)
+                h, st = xlstm.mlstm_decode(p["cell"], h, cache["state"], self.xl_cfg, engine)
             else:
-                h, st = xlstm.mlstm_apply(p["cell"], h, self.xl_cfg, self.policy)
+                h, st = xlstm.mlstm_apply(p["cell"], h, self.xl_cfg, engine)
             if new_cache is not None:
                 new_cache["state"] = st
         elif kind == "slstm":
             if decode:
-                h, st = xlstm.slstm_decode(p["cell"], h, cache["state"], self.xl_cfg, self.policy)
+                h, st = xlstm.slstm_decode(p["cell"], h, cache["state"], self.xl_cfg, engine)
             else:
-                h, st = xlstm.slstm_apply(p["cell"], h, self.xl_cfg, self.policy)
+                h, st = xlstm.slstm_apply(p["cell"], h, self.xl_cfg, engine)
             if new_cache is not None:
                 new_cache["state"] = st
         elif kind == "rglru":
             if decode:
-                h, st = rglru.apply_decode(p["cell"], h, cache["state"], self.rg_cfg, self.policy)
+                h, st = rglru.apply_decode(p["cell"], h, cache["state"], self.rg_cfg, engine)
             else:
-                h, st = rglru.apply_scan(p["cell"], h, self.rg_cfg, self.policy)
+                h, st = rglru.apply_scan(p["cell"], h, self.rg_cfg, engine)
             if new_cache is not None:
                 new_cache["state"] = st
         x = x + h
@@ -232,15 +239,15 @@ class Transformer:
             hx = common.norm_apply(p["norm_x"], x, cfg.norm)
             if enc_out is None:
                 # decode: use the cross-KV cached at prefill time
-                ck = cache["cross_k"].astype(self.policy.compute)
-                cv = cache["cross_v"].astype(self.policy.compute)
+                ck = cache["cross_k"].astype(engine.policy.compute)
+                cv = cache["cross_v"].astype(engine.policy.compute)
                 cp = enc_pos
                 new_cache["cross_k"] = cache["cross_k"]
                 new_cache["cross_v"] = cache["cross_v"]
             else:
                 acfg = self.attn_cfg("attn")
-                ck = common.dense_apply(p["cross"]["k"], enc_out, self.policy)
-                cv = common.dense_apply(p["cross"]["v"], enc_out, self.policy)
+                ck = common.dense_apply(p["cross"]["k"], enc_out, engine)
+                cv = common.dense_apply(p["cross"]["v"], enc_out, engine)
                 b, se, _ = enc_out.shape
                 ck = ck.reshape(b, se, acfg.n_kv_heads, acfg.head_dim)
                 cv = cv.reshape(b, se, acfg.n_kv_heads, acfg.head_dim)
@@ -248,10 +255,10 @@ class Transformer:
                 if new_cache is not None:
                     new_cache["cross_k"] = ck.astype(self.kv_dtype)
                     new_cache["cross_v"] = cv.astype(self.kv_dtype)
-                ck = ck.astype(self.policy.compute)
-                cv = cv.astype(self.policy.compute)
+                ck = ck.astype(engine.policy.compute)
+                cv = cv.astype(engine.policy.compute)
             hx, _ = attention.apply(
-                p["cross"], hx, positions, self.attn_cfg("attn"), self.policy,
+                p["cross"], hx, positions, self.attn_cfg("attn"), engine,
                 cross_kv=(ck, cv, cp), mesh_ctx=self.mesh_ctx,
             )
             x = x + hx
@@ -261,17 +268,17 @@ class Transformer:
             if "moe" in p:
                 mc = self.mesh_ctx
                 h2, aux = moe.apply(
-                    p["moe"], h2, self.moe_cfg, self.policy,
+                    p["moe"], h2, self.moe_cfg, engine,
                     mesh=mc.mesh, dp_axes=mc.dp_axes, ep_axis=mc.ep_axis,
                 )
             else:
-                h2 = ffn.apply(p["ffn"], h2, cfg.act, self.policy)
+                h2 = ffn.apply(p["ffn"], h2, cfg.act, engine)
             x = x + h2
         return x, new_cache, aux
 
     def _run_stack(
-        self, stack, x, positions, *, cache=None, enc_out=None, enc_pos=None,
-        causal=True, decode=False,
+        self, stack, x, positions, engine, *, cache=None, enc_out=None,
+        enc_pos=None, causal=True, decode=False,
     ):
         """Scan the stacked units, then the remainder blocks."""
         n_units = self.n_units if stack is not None else 0
@@ -282,7 +289,7 @@ class Transformer:
             aux_sum = jnp.zeros((), jnp.float32)
             for j, kind in enumerate(self.pattern):
                 x, c, aux = self._apply_block(
-                    kind, unit_p[f"b{j}"], x, positions,
+                    kind, unit_p[f"b{j}"], x, positions, engine,
                     cache=None if unit_c is None else unit_c[f"b{j}"],
                     enc_out=enc_out, enc_pos=enc_pos, causal=causal,
                     decode=decode,
@@ -319,7 +326,7 @@ class Transformer:
         for i in range(len(stack["rem"])):
             kind = self.pattern[i % len(self.pattern)]
             x, c, aux = self._apply_block(
-                kind, stack["rem"][f"r{i}"], x, positions,
+                kind, stack["rem"][f"r{i}"], x, positions, engine,
                 cache=None if cache is None else cache["rem"][f"r{i}"],
                 enc_out=enc_out, enc_pos=enc_pos, causal=causal, decode=decode,
             )
@@ -331,15 +338,17 @@ class Transformer:
         return x, new_cache, aux_total
 
     # -- embedding / heads ----------------------------------------------------
-    def embed(self, params, tokens):
-        x = common.embed_apply(params["embed"], tokens).astype(self.policy.compute)
+    def embed(self, params, tokens, engine: Engine | None = None):
+        eng = as_engine(engine) if engine is not None else self.engine
+        x = common.embed_apply(params["embed"], tokens).astype(eng.policy.compute)
         return x * self.embed_scale
 
-    def logits(self, params, h):
+    def logits(self, params, h, engine: Engine | None = None):
+        eng = as_engine(engine) if engine is not None else self.engine
         if self.cfg.tie_embeddings:
-            out = common.unembed_apply(params["embed"], h, self.policy)
+            out = common.unembed_apply(params["embed"], h, eng)
         else:
-            out = common.dense_apply(params["head"], h, self.policy)
+            out = common.dense_apply(params["head"], h, eng)
         out = out.astype(jnp.float32)
         out = common.softcap(out, self.cfg.final_softcap)
         # Vocab-parallel logits: keep the vocab dim sharded over the TP axis
@@ -359,9 +368,11 @@ class Transformer:
             )
         return out
 
-    def _encode(self, params, frames):
+    def _encode(self, params, frames, engine: Engine):
         """Audio encoder on stub frame embeddings (B, S_enc, d)."""
-        x = common.dense_apply(params["enc_proj"], frames.astype(self.policy.compute), self.policy)
+        x = common.dense_apply(
+            params["enc_proj"], frames.astype(engine.policy.compute), engine
+        )
         pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
         # Encoder stack: pattern is ("attn",) for encoders in this zoo.
         enc = Transformer(
@@ -370,32 +381,35 @@ class Transformer:
                 n_encoder_layers=0, block_pattern=("attn",),
             ),
             self.mesh_ctx,
+            engine=engine,
         )
-        x, _, _ = enc._run_stack(params["encoder"], x, pos, causal=False)
+        x, _, _ = enc._run_stack(params["encoder"], x, pos, engine, causal=False)
         return common.norm_apply(params["enc_final_norm"], x, self.cfg.norm), pos
 
     # -- public entry points ---------------------------------------------------
-    def forward(self, params, batch):
+    def forward(self, params, batch, *, engine: Engine | None = None):
         """Teacher-forced forward. Returns (hidden (B,S,d), aux_loss).
 
         batch: {"tokens": (B, S)} (+ "vis_embeds" (B,P,d) for vlm,
-        + "frames" (B,S_enc,d) for audio enc-dec).
+        + "frames" (B,S_enc,d) for audio enc-dec). ``engine`` overrides the
+        model's configured engine for this call (step-factory plumbing).
         """
         cfg = self.cfg
+        eng = as_engine(engine) if engine is not None else self.engine
         tokens = batch["tokens"]
-        x = self.embed(params, tokens)
+        x = self.embed(params, tokens, engine=eng)
         enc_out = enc_pos = None
         if cfg.family == "vlm":
             vis = common.dense_apply(
-                params["vis_proj"], batch["vis_embeds"].astype(self.policy.compute), self.policy
+                params["vis_proj"], batch["vis_embeds"].astype(eng.policy.compute), eng
             )
             x = jnp.concatenate([vis, x], axis=1)
         if cfg.is_encoder_decoder:
-            enc_out, enc_pos = self._encode(params, batch["frames"])
+            enc_out, enc_pos = self._encode(params, batch["frames"], eng)
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
         x = self._constrain(x)
         x, _, aux = self._run_stack(
-            params["decoder"], x, positions, enc_out=enc_out, enc_pos=enc_pos
+            params["decoder"], x, positions, eng, enc_out=enc_out, enc_pos=enc_pos
         )
         x = common.norm_apply(params["final_norm"], x, cfg.norm)
         if cfg.family == "vlm":
@@ -440,40 +454,42 @@ class Transformer:
         return {"pos": jnp.zeros((), jnp.int32), "units": units, "rem": rem,
                 "enc_pos": jnp.arange(max(cross_len, 1), dtype=jnp.int32)}
 
-    def prefill(self, params, batch, cache):
+    def prefill(self, params, batch, cache, *, engine: Engine | None = None):
         """Run the prompt through the decoder, filling caches."""
         cfg = self.cfg
+        eng = as_engine(engine) if engine is not None else self.engine
         tokens = batch["tokens"]
-        x = self.embed(params, tokens)
+        x = self.embed(params, tokens, engine=eng)
         enc_out = enc_pos = None
         if cfg.family == "vlm":
             vis = common.dense_apply(
-                params["vis_proj"], batch["vis_embeds"].astype(self.policy.compute), self.policy
+                params["vis_proj"], batch["vis_embeds"].astype(eng.policy.compute), eng
             )
             x = jnp.concatenate([vis, x], axis=1)
         if cfg.is_encoder_decoder:
-            enc_out, enc_pos = self._encode(params, batch["frames"])
+            enc_out, enc_pos = self._encode(params, batch["frames"], eng)
         positions = cache["pos"] + jnp.arange(x.shape[1], dtype=jnp.int32)
         x, new_cache, _ = self._run_stack(
-            params["decoder"], x, positions, cache=cache,
+            params["decoder"], x, positions, eng, cache=cache,
             enc_out=enc_out, enc_pos=enc_pos,
         )
         x = common.norm_apply(params["final_norm"], x, cfg.norm)
-        logits = self.logits(params, x[:, -1:])
+        logits = self.logits(params, x[:, -1:], engine=eng)
         new_cache["pos"] = cache["pos"] + x.shape[1]
         new_cache["enc_pos"] = cache["enc_pos"]
         return logits, new_cache
 
-    def decode_step(self, params, tokens, cache):
+    def decode_step(self, params, tokens, cache, *, engine: Engine | None = None):
         """One-token decode. tokens: (B, 1)."""
-        x = self.embed(params, tokens)
+        eng = as_engine(engine) if engine is not None else self.engine
+        x = self.embed(params, tokens, engine=eng)
         positions = cache["pos"] + jnp.arange(1, dtype=jnp.int32)
         x, new_cache, _ = self._run_stack(
-            params["decoder"], x, positions, cache=cache, decode=True,
+            params["decoder"], x, positions, eng, cache=cache, decode=True,
             enc_pos=cache.get("enc_pos"),
         )
         x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
-        logits = self.logits(params, x)
+        logits = self.logits(params, x, engine=eng)
         new_cache["pos"] = cache["pos"] + 1
         new_cache["enc_pos"] = cache["enc_pos"]
         return logits, new_cache

@@ -4,7 +4,8 @@
 Cell math is the paper's stabilized exponential-gating formulation. Block
 wiring is simplified to pre-norm residual cells with fused projections (the
 xLSTM paper's up/down projection sandwich is folded into the cell's in/out
-projections; documented in DESIGN.md). All projections go through RedMulE.
+projections; documented in docs/DESIGN.md). All projections go through the
+RedMulE Engine.
 
 mLSTM decode state is O(hd^2) per head — independent of context length —
 which is why this arch runs the long_500k shape.
@@ -17,8 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import PrecisionPolicy
-from repro.core.redmule import mp_matmul
+from repro.engine import Engine, as_engine
 from repro.models import common
 
 _CHUNK = 256
@@ -49,29 +49,30 @@ def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.bfloat16):
     }
 
 
-def _mlstm_heads(params, x, cfg: XLSTMConfig, policy):
+def _mlstm_heads(params, x, cfg: XLSTMConfig, engine):
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
-    qkv = common.dense_apply(params["qkv"], x, policy)
+    qkv = common.dense_apply(params["qkv"], x, engine)
     q, k, v = jnp.split(qkv, 3, axis=-1)
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # (B,H,S,hd)
     k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3) / math.sqrt(hd)
     v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
-    ifg = common.dense_apply(params["ifg"], x, policy).astype(jnp.float32)
+    ifg = common.dense_apply(params["ifg"], x, engine).astype(jnp.float32)
     log_i, f_pre = jnp.split(ifg, 2, axis=-1)  # (B,S,H) each
     log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f_pre)
     return q, k, v, log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1)
 
 
-def mlstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
+def mlstm_apply(params, x, cfg: XLSTMConfig, engine: Engine):
     """Chunkwise-parallel mLSTM forward. x: (B, S, D).
 
     Returns (y, final_state) — the final state is the decode cache, so
     prefill falls out of the training path for free.
     """
+    engine = as_engine(engine)
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
-    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, policy)
+    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, engine)
 
     c = min(_CHUNK, s)
     assert s % c == 0, (s, c)
@@ -98,13 +99,13 @@ def mlstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
         m_t = jnp.maximum(F + m_in[..., None], F + intra_max)  # (B,H,c)
         # inter-chunk: q_t . C_in, scaled by exp(F_t + m_in - m_t)
         w_inter = jnp.exp(F + m_in[..., None] - m_t)  # (B,H,c)
-        inter = mp_matmul(qi, C_in, policy).astype(jnp.float32) * w_inter[..., None]
+        inter = engine.matmul(qi, C_in).astype(jnp.float32) * w_inter[..., None]
         n_inter = n_in[:, :, None, :] * w_inter[..., None]
         # intra-chunk quadratic part
-        scores = mp_matmul(qi, jnp.swapaxes(ki, -1, -2), policy).astype(jnp.float32)
+        scores = engine.matmul(qi, jnp.swapaxes(ki, -1, -2)).astype(jnp.float32)
         logw = F[:, :, :, None] + src[:, :, None, :] - m_t[..., None]
         wts = jnp.where(tri, jnp.exp(logw), 0.0) * scores
-        intra = mp_matmul(wts.astype(qi.dtype), vi, policy).astype(jnp.float32)
+        intra = engine.matmul(wts.astype(qi.dtype), vi).astype(jnp.float32)
         n_intra = jnp.einsum("bhts,bhsd->bhtd",
                              jnp.where(tri, jnp.exp(logw), 0.0), ki.astype(jnp.float32))
         n_t = n_inter + n_intra
@@ -130,17 +131,18 @@ def mlstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
     hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
     y = hs.reshape(b, s, d).astype(x.dtype)
     y = y * jax.nn.sigmoid(
-        common.dense_apply(params["ogate"], x, policy).astype(jnp.float32)
+        common.dense_apply(params["ogate"], x, engine).astype(jnp.float32)
     ).astype(x.dtype)
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     return out, {"C": C, "n": n, "m": m}
 
 
-def mlstm_decode(params, x, state, cfg: XLSTMConfig, policy: PrecisionPolicy):
+def mlstm_decode(params, x, state, cfg: XLSTMConfig, engine: Engine):
     """One-step recurrence. x: (B, 1, D); state: {"C","n","m"}."""
+    engine = as_engine(engine)
     b = x.shape[0]
     h, hd = cfg.n_heads, cfg.head_dim
-    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, policy)
+    q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, engine)
     q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,hd)
     li, lf = log_i[..., 0], log_f[..., 0]  # (B,H)
     m_new = jnp.maximum(lf + state["m"], li)
@@ -155,9 +157,9 @@ def mlstm_decode(params, x, state, cfg: XLSTMConfig, policy: PrecisionPolicy):
     denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
     y = (num / denom[..., None]).reshape(b, 1, -1).astype(x.dtype)
     y = y * jax.nn.sigmoid(
-        common.dense_apply(params["ogate"], x, policy).astype(jnp.float32)
+        common.dense_apply(params["ogate"], x, engine).astype(jnp.float32)
     ).astype(x.dtype)
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     return out, {"C": C, "n": n, "m": m_new}
 
 
@@ -204,11 +206,12 @@ def _slstm_cell(wx_t, r, h_prev, c_prev, n_prev, m_prev, nheads, hd):
     return h_new, c, n, m_new
 
 
-def slstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
+def slstm_apply(params, x, cfg: XLSTMConfig, engine: Engine):
     """Sequential sLSTM forward. Returns (y, final_state)."""
+    engine = as_engine(engine)
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
-    wx = common.dense_apply(params["wx"], x, policy)  # (B,S,4D)
+    wx = common.dense_apply(params["wx"], x, engine)  # (B,S,4D)
 
     def step(carry, wx_t):
         h_prev, c_prev, n_prev, m_prev = carry
@@ -221,18 +224,19 @@ def slstm_apply(params, x, cfg: XLSTMConfig, policy: PrecisionPolicy):
     (hf, cf, nf, mf), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
                                         wx.transpose(1, 0, 2))
     y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     return out, {"h": hf, "c": cf, "n": nf, "m": mf}
 
 
-def slstm_decode(params, x, state, cfg: XLSTMConfig, policy: PrecisionPolicy):
+def slstm_decode(params, x, state, cfg: XLSTMConfig, engine: Engine):
+    engine = as_engine(engine)
     h, hd = cfg.n_heads, cfg.head_dim
-    wx = common.dense_apply(params["wx"], x, policy)[:, 0]
+    wx = common.dense_apply(params["wx"], x, engine)[:, 0]
     h_new, c, n, m = _slstm_cell(
         wx, params["r"], state["h"], state["c"], state["n"], state["m"], h, hd
     )
     y = h_new.reshape(x.shape[0], 1, -1).astype(x.dtype)
-    out = common.dense_apply(params["out"], y, policy)
+    out = common.dense_apply(params["out"], y, engine)
     return out, {"h": h_new, "c": c, "n": n, "m": m}
 
 

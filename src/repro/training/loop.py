@@ -11,16 +11,25 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import redmule
+from repro.engine import Engine, as_engine, current_engine, engine_scope
 from repro.models.transformer import Transformer
 
 AUX_LOSS_WEIGHT = 0.01
 XENT_CHUNK = 512
 
 
-def _engine_backend(model, backend: str | None) -> str:
-    """Backend resolution for the step factories: explicit arg > model config."""
-    return backend or getattr(model, "backend", None) or redmule.default_backend()
+def resolve_engine(model, engine: Engine | None = None,
+                   backend: str | None = None) -> Engine:
+    """Engine resolution for the step factories: explicit engine > model's
+    configured engine > ambient scope; ``backend`` then overrides the
+    execution backend (the launcher CLI knob)."""
+    if engine is not None:
+        eng = as_engine(engine)
+    else:
+        eng = getattr(model, "engine", None) or current_engine()
+    if backend:
+        eng = eng.with_backend(backend)
+    return eng
 
 
 def _shift_labels(tokens):
@@ -32,7 +41,8 @@ def _shift_labels(tokens):
     return labels, mask
 
 
-def chunked_xent(model: Transformer, params, h, labels, mask, chunk=XENT_CHUNK):
+def chunked_xent(model: Transformer, params, h, labels, mask, chunk=XENT_CHUNK,
+                 engine: Engine | None = None):
     """sum CE over masked positions, computed chunk-by-chunk with remat."""
     b, s, d = h.shape
     c = min(chunk, s)
@@ -48,7 +58,7 @@ def chunked_xent(model: Transformer, params, h, labels, mask, chunk=XENT_CHUNK):
 
     @jax.checkpoint
     def chunk_loss(params, h_c, y_c, m_c):
-        logits = model.logits(params, h_c)  # (B, c, V) fp32 (+final softcap)
+        logits = model.logits(params, h_c, engine=engine)  # (B,c,V) fp32
         logz = jax.nn.logsumexp(logits, axis=-1)
         # one-hot contraction instead of take_along_axis: reduces over the
         # (possibly TP-sharded) vocab dim, so under vocab-parallel sharding
@@ -65,16 +75,20 @@ def chunked_xent(model: Transformer, params, h, labels, mask, chunk=XENT_CHUNK):
     return total, jnp.sum(mask)
 
 
-def make_loss_fn(model: Transformer, *, backend: str | None = None) -> Callable:
-    """Loss factory. ``backend`` selects the GEMM engine for every matmul in
-    the traced step (forward *and* its VJP); default is the model's config."""
-    eng = _engine_backend(model, backend)
+def make_loss_fn(model: Transformer, *, engine: Engine | None = None,
+                 backend: str | None = None) -> Callable:
+    """Loss factory. ``engine`` (or the ``backend`` override) selects the
+    GEMM engine for every matmul in the traced step (forward *and* its
+    VJP); default is the model's configured engine. The engine is passed
+    explicitly through the model AND installed as the ambient scope, so
+    stray shim-level calls inside custom models follow the same choice."""
+    eng = resolve_engine(model, engine, backend)
 
     def loss_fn(params, batch):
-        with redmule.use_backend(eng):
-            h, aux = model.forward(params, batch)
+        with engine_scope(eng):
+            h, aux = model.forward(params, batch, engine=eng)
             labels, mask = _shift_labels(batch["tokens"])
-            total, denom = chunked_xent(model, params, h, labels, mask)
+            total, denom = chunked_xent(model, params, h, labels, mask, engine=eng)
         loss = total / jnp.maximum(denom, 1.0)
         return loss + AUX_LOSS_WEIGHT * aux, {"xent": loss, "aux": aux}
 
@@ -90,16 +104,17 @@ class TrainState(NamedTuple):
 
 
 def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True,
-                    grad_accum: int = 1, backend: str | None = None) -> Callable:
+                    grad_accum: int = 1, engine: Engine | None = None,
+                    backend: str | None = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     anomaly_guard: skip the update (keep params) when the global grad norm is
     non-finite — a NaN/inf produced by a bad batch or a flaky worker must not
     poison the replicated state (fault-tolerance at step granularity).
-    backend: GEMM engine for the step (xla | pallas | pallas_interpret);
-    defaults to the model's configured backend.
+    engine/backend: GEMM engine for the step; defaults to the model's
+    configured engine (``backend`` alone swaps just the execution backend).
     """
-    loss_fn = make_loss_fn(model, backend=backend)
+    loss_fn = make_loss_fn(model, engine=engine, backend=backend)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def train_step(state: TrainState, batch):
@@ -144,19 +159,20 @@ def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True
     return train_step
 
 
-def make_serve_steps(model: Transformer, *, backend: str | None = None):
+def make_serve_steps(model: Transformer, *, engine: Engine | None = None,
+                     backend: str | None = None):
     """(prefill_step, decode_step) pair for serving."""
-    eng = _engine_backend(model, backend)
+    eng = resolve_engine(model, engine, backend)
 
     def prefill_step(params, batch, max_len: int):
         cross = batch["frames"].shape[1] if "frames" in batch else 0
         cache = model.init_cache(batch["tokens"].shape[0], max_len, cross_len=cross)
-        with redmule.use_backend(eng):
-            logits, cache = model.prefill(params, batch, cache)
+        with engine_scope(eng):
+            logits, cache = model.prefill(params, batch, cache, engine=eng)
         return logits, cache
 
     def decode_step(params, tokens, cache):
-        with redmule.use_backend(eng):
-            return model.decode_step(params, tokens, cache)
+        with engine_scope(eng):
+            return model.decode_step(params, tokens, cache, engine=eng)
 
     return prefill_step, decode_step

@@ -119,9 +119,12 @@ def test_fp8_residual_storage(rng):
     pol = REDMULE_HFP8
     a = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
     b = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
+    from repro.engine import Engine, autodiff
+
+    eng = Engine(policy=pol, backend="xla")
     _, vjp = jax.vjp(
-        lambda a_, b_: redmule._mp_core(a_.astype(pol.compute),
-                                        b_.astype(pol.compute), pol, "xla"),
+        lambda a_, b_: autodiff._mp_core(a_.astype(pol.compute),
+                                         b_.astype(pol.compute), eng),
         a, b,
     )
     res_leaves = jax.tree.leaves(vjp)
