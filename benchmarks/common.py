@@ -20,16 +20,41 @@ def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
 
 
 class Rows:
-    """Collects CSV rows: name,us_per_call,derived."""
+    """Collects benchmark rows: the ``name,us_per_call,derived`` CSV the
+    driver prints, plus a machine-readable JSON view (BENCH_*.json).
+
+    ``name`` is ``section/...``; extra keyword metrics (tok_s, gflops, ...)
+    ride into the JSON only — the CSV stays stable for eyeballs and diffs.
+    """
 
     def __init__(self):
-        self.rows: list[tuple[str, str, str]] = []
+        self.rows: list[dict] = []
 
-    def add(self, name: str, us_per_call=None, derived=None):
-        us = "" if us_per_call is None else f"{us_per_call:.2f}"
-        dv = "" if derived is None else str(derived)
-        self.rows.append((name, us, dv))
+    def add(self, name: str, us_per_call=None, derived=None, **extra):
+        self.rows.append({
+            "name": name,
+            "us_per_call": None if us_per_call is None else float(us_per_call),
+            "derived": None if derived is None else str(derived),
+            **extra,
+        })
 
     def emit(self):
-        for name, us, dv in self.rows:
-            print(f"{name},{us},{dv}")
+        for r in self.rows:
+            us = "" if r["us_per_call"] is None else f"{r['us_per_call']:.2f}"
+            dv = r["derived"] or ""
+            print(f"{r['name']},{us},{dv}")
+
+    def to_json(self) -> dict:
+        """Rows grouped by their ``section/`` name prefix."""
+        sections: dict[str, list[dict]] = {}
+        for r in self.rows:
+            sections.setdefault(r["name"].split("/", 1)[0], []).append(r)
+        return {"sections": sections}
+
+    def write_json(self, path: str, meta: dict | None = None) -> None:
+        import json
+
+        doc = dict(meta or {}, **self.to_json())
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")

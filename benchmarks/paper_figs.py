@@ -153,7 +153,7 @@ def fig10_error_analysis(rows: Rows):
     """Fig 10: RMSE vs reduction size N for the three format stacks.
 
     Inputs live on the fp8/fp16 storage grid; the oracle is the exact
-    product of the same stored values (see docs/DESIGN.md Sec. 6)."""
+    product of the same stored values (see docs/DESIGN.md Sec. 7)."""
     rng = np.random.default_rng(0)
     for n in (16, 64, 256, 1024):
         x = jnp.asarray(rng.standard_normal((32, n)).astype(np.float32) / np.sqrt(n))

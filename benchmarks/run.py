@@ -1,17 +1,20 @@
 """Benchmark driver: one section per paper table/figure + the roofline table,
-the xla-vs-pallas backend comparison, and the per-op GEMM-Ops section
-(semiring throughput vs plain GEMM, tracked in BENCH_*.json).
+the xla-vs-pallas backend comparison, the per-op GEMM-Ops section, and the
+serving (continuous vs static batching) section.
 
-Prints ``name,us_per_call,derived`` CSV. ``derived`` is ``ours|paper`` when
-the paper states a value for the row. ``--smoke`` runs only the backend
-comparison + GEMM-Ops sections on a reduced shape set (the CI nightly
-job's perf canary).
+Prints ``name,us_per_call,derived`` CSV and, with ``--smoke`` (or an
+explicit ``--json PATH``), writes the same rows machine-readably to
+``BENCH_smoke.json`` — the artifact CI uploads so the bench trajectory is
+diffable across commits. ``--smoke`` runs the backend comparison, GEMM-Ops
+and serving sections on a reduced shape set (the CI nightly perf canary).
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks import gemm_backends, gemm_ops, paper_figs
+import jax
+
+from benchmarks import gemm_backends, gemm_ops, paper_figs, serving
 from benchmarks.common import Rows
 from benchmarks.roofline_table import roofline_rows
 
@@ -20,7 +23,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--smoke", action="store_true",
-        help="reduced run: backend comparison only, small shape set",
+        help="reduced run: backend/gemm-ops/serving sections, small shapes",
+    )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write machine-readable rows (default: BENCH_smoke.json "
+        "when --smoke is set)",
     )
     args = ap.parse_args(argv)
 
@@ -29,13 +37,22 @@ def main(argv=None) -> None:
     if args.smoke:
         gemm_backends.bench_backends(rows, smoke=True)
         gemm_ops.bench_gemm_ops(rows, smoke=True)
+        serving.bench_serving(rows, smoke=True)
     else:
         for bench in paper_figs.ALL:
             bench(rows)
         roofline_rows(rows)
         gemm_backends.bench_backends(rows, smoke=False)
         gemm_ops.bench_gemm_ops(rows, smoke=False)
+        serving.bench_serving(rows, smoke=False)
     rows.emit()
+
+    json_path = args.json or ("BENCH_smoke.json" if args.smoke else None)
+    if json_path:
+        rows.write_json(json_path, meta={
+            "smoke": args.smoke, "platform": jax.default_backend(),
+        })
+        print(f"# wrote {json_path}")
 
 
 if __name__ == "__main__":

@@ -1,28 +1,30 @@
-"""Batched serving: prefill + greedy decode with a ring-buffer KV cache,
-optionally stored in fp8 (the paper's storage format applied to the cache).
+"""Continuous-batching serving demo: mixed-length requests stream through
+the paged KV-cache pool (``repro.serving``), each with its own sampling
+settings, while the decode batch stays one fixed jitted shape.
 
-  PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+  PYTHONPATH=src python examples/serve_decode.py --arch granite-3-8b
+  PYTHONPATH=src python examples/serve_decode.py --fp8-kv   # E4M3 KV pages
 """
 import argparse
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build, make_batch
-from repro.training import make_serve_steps
+from repro.serving import SamplingParams, Server, ServerConfig, generate_static
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="granite-3-8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--num-slots", type=int, default=2)
     ap.add_argument("--fp8-kv", action="store_true",
-                    help="store the KV cache in E4M3 (paper fp8 storage)")
+                    help="store the KV pages in E4M3 (paper fp8 storage)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -30,32 +32,46 @@ def main():
         cfg = dataclasses.replace(cfg, kv_cache_dtype="e4m3")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    batch = make_batch(cfg, args.batch, args.prompt_len, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
 
-    prefill_step, decode_step = make_serve_steps(model)
-    max_len = args.prompt_len + args.gen
-    prefill = jax.jit(lambda p, b: prefill_step(p, b, max_len))
-    decode = jax.jit(decode_step)
+    if not model.supports_paged():
+        # Recurrent / enc-dec / VLM families serve on the static-batch path.
+        print(f"{cfg.name}: no paged-attention path; static-batch decode")
+        batch = make_batch(cfg, args.requests, args.prompt_len,
+                           jax.random.PRNGKey(1))
+        seqs, stats = generate_static(model, params, batch,
+                                      max_new_tokens=args.gen)
+        print(seqs)
+        print(f"{stats.decode_tok_s:.1f} tok/s steady-state decode "
+              "(compile excluded)")
+        return
 
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    dt = time.time() - t0
-    seqs = jnp.concatenate(out, axis=1)
-    kv_bytes = sum(
-        x.size * x.dtype.itemsize
-        for x in jax.tree.leaves(cache)
-        if hasattr(x, "dtype")
-    )
-    print(f"arch={cfg.name} kv_dtype={cfg.kv_cache_dtype} cache={kv_bytes/1e6:.2f} MB")
-    print(f"decoded {args.batch}x{args.gen} tokens, "
-          f"{args.batch*(args.gen-1)/dt:.1f} tok/s (post-compile)")
-    print(seqs)
+    server = Server(model, params, ServerConfig(
+        num_slots=args.num_slots, page_size=8,
+        max_seq_len=args.prompt_len + args.gen, prefill_bucket=8,
+    ))
+    print(f"arch={cfg.name} kv_dtype={cfg.kv_cache_dtype} "
+          f"pool={server.cache.kv_bytes() / 1e6:.2f} MB "
+          f"({server.cache.allocator.num_pages} pages x 8 tokens)")
+
+    # Mixed lengths, mixed sampling: even requests greedy, odd ones sampled.
+    lens = [max(2, args.prompt_len - 3 * (i % 3)) for i in range(args.requests)]
+    server.warmup(lens)  # compile every jitted shape before timing
+    for i, plen in enumerate(lens):
+        sampling = (SamplingParams() if i % 2 == 0
+                    else SamplingParams(temperature=0.8, top_k=40, top_p=0.95))
+        server.submit(rng.integers(0, cfg.vocab_size, size=plen),
+                      max_new_tokens=args.gen, sampling=sampling)
+    # Tokens stream out as soon as each decode step samples them, in arrival
+    # order interleaved across requests — that's continuous batching.
+    for ev in server.stream():
+        tag = f" <- {ev.finish_reason}" if ev.finished else ""
+        print(f"req {ev.rid} token[{ev.index}] = {ev.token}{tag}")
+
+    s = server.stats
+    print(f"\n{len(server.results)} requests done: "
+          f"{s.decode_tok_s:.1f} tok/s steady-state decode "
+          f"(compile excluded), utilization {s.utilization:.0%}")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,18 @@ _HEURISTIC = {
     2: (128, 128, 128),  # fp16/bf16
     4: (128, 128, 128),  # fp32
 }
+# Serving decode GEMMs are skinny: M = #slots (often 1-8) x K = d_model.
+# Padding such rows to a training-size M tile wastes the whole tile on
+# garbage rows, so up to this M the tile clamps to M exactly and the freed
+# VMEM goes into a deeper K tile (K is where decode's work actually is —
+# the M=1 depthwise rows of paper Fig. 11, transplanted to serving).
+_SKINNY_M = 8
+# (bk, bn) per storage byte-width for the skinny-M decode table.
+_SKINNY_HEURISTIC = {
+    1: (1024, 128),
+    2: (512, 128),
+    4: (512, 128),
+}
 # VMEM budget for one grid step's working set (x, w, y/out, acc tiles).
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -48,6 +60,12 @@ AUTOTUNE_CANDIDATES = (
     (64, 128, 256),
     (32, 128, 512),
     (128, 128, 64),
+    # Skinny decode rows (M in {1, 2, 4, 8}); clamping dedupes these for
+    # training-size problems so the sweep cost stays bounded.
+    (1, 128, 512),
+    (2, 128, 512),
+    (4, 128, 512),
+    (8, 128, 256),
 )
 
 
@@ -91,10 +109,23 @@ def heuristic_block_sizes(
     """Table-driven tile choice keyed on storage byte width, problem-clamped.
 
     Auto-selected tiles respect the dtype's TPU min-tile granularity: the
-    M/K tiles are multiples of SUBLANE[itemsize], N of the 128 lane.
+    M/K tiles are multiples of SUBLANE[itemsize], N of the 128 lane —
+    except skinny decode rows (m <= _SKINNY_M), where block_m clamps to m
+    exactly so one-token decode GEMMs don't pad to training tiles.
     """
     itemsize = jnp.dtype(storage_dtype).itemsize
     sub = SUBLANE.get(itemsize, 8)
+    if m <= _SKINNY_M:
+        # Decode-shape table: block_m == M exactly (no sublane round-up —
+        # a training tile would spend its whole M on padding; interpret
+        # mode accepts sub-sublane tiles, real-TPU re-tunes override this
+        # via the autotune cache). K tile deepens into the freed VMEM.
+        bk, bn = _SKINNY_HEURISTIC.get(itemsize, (512, 128))
+        bm = m
+        while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
+            bk //= 2
+        _, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+        return bm, _ceil_to(bn, LANE), _ceil_to(bk, sub)
     bm, bn, bk = _HEURISTIC.get(itemsize, (128, 128, 128))
     # Tall-skinny / short-wide adjustments: spend the VMEM budget on the
     # dimension that actually exists (paper Fig. 11: M=1 depthwise rows).

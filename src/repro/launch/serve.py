@@ -1,28 +1,48 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher on the ``repro.serving`` subsystem.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \
-      --batch 4 --prompt-len 16 --gen 16
+Default mode is continuous batching over the paged KV pool; ``--mode
+static`` runs the ring-buffer static-batch path for comparison. Both report
+steady-state tok/s (compile excluded — the continuous path warms up every
+jitted shape first, the static path times its first decode separately).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke --fp8-kv
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import build, make_batch
-from repro.training import make_serve_steps
+from repro.models import build
+from repro.serving import SamplingParams, Server, ServerConfig, generate_static
+
+
+def mixed_prompt_lens(base: int, n: int) -> list[int]:
+    """Deterministic mixed-length workload around ``base`` (>=2 tokens)."""
+    cycle = [base, max(2, base // 2), base + base // 2, max(2, base - 2)]
+    return [cycle[i % len(cycle)] for i in range(n)]
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="granite-3-8b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", choices=("continuous", "static"), default="continuous")
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--fp8-kv", action="store_true",
+                    help="store the KV pages in E4M3 (paper fp8 storage)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument(
         "--backend", choices=("", "xla", "pallas", "pallas_interpret"),
         default="", help="GEMM engine backend override (default: config)",
@@ -31,32 +51,70 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.fp8_kv:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="e4m3")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    batch = make_batch(cfg, args.batch, args.prompt_len, jax.random.PRNGKey(1))
-
     eng = model.engine.with_backend(args.backend) if args.backend else model.engine
-    print(f"engine: policy={eng.policy.name} backend={eng.backend}")
-    prefill_step, decode_step = make_serve_steps(model, engine=eng)
-    max_len = args.prompt_len + args.gen
-    prefill = jax.jit(lambda p, b: prefill_step(p, b, max_len))
-    decode = jax.jit(decode_step)
+    print(f"engine: policy={eng.policy.name} backend={eng.backend} "
+          f"kv_dtype={cfg.kv_cache_dtype}")
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    out = jnp.concatenate(generated, axis=1)
-    dt = time.time() - t0
-    print("generated tokens:\n", out)
-    print(
-        f"{args.batch} seqs x {args.gen} tokens in {dt:.2f}s "
-        f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)"
+    rng = np.random.default_rng(args.seed)
+    sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
+
+    mode = args.mode
+    if mode == "continuous" and not model.supports_paged():
+        print(f"note: {cfg.name} ({cfg.family}/{cfg.block_pattern}) has no "
+              "paged-attention path; falling back to static-batch serving")
+        mode = "static"
+
+    if mode == "static":
+        tokens = rng.integers(
+            0, cfg.vocab_size, size=(args.requests, args.prompt_len)
+        ).astype(np.int32)
+        seqs, stats = generate_static(
+            model, params, {"tokens": jnp.asarray(tokens)},
+            max_new_tokens=args.max_new, engine=eng, sampling=sampling,
+            seed=args.seed,
+        )
+        print(f"static: {args.requests} seqs x {args.max_new} tokens "
+              f"(prefill {stats.prefill_s:.2f}s, first decode "
+              f"{stats.first_decode_s:.2f}s incl. compile)")
+        print(f"steady-state decode: {stats.decode_tok_s:.1f} tok/s "
+              f"over {stats.steady_steps} steps")
+        print(seqs)
+        return
+
+    lens = mixed_prompt_lens(args.prompt_len, args.requests)
+    max_seq = max(lens) + args.max_new
+    server = Server(
+        model, params,
+        ServerConfig(
+            num_slots=args.num_slots, page_size=args.page_size,
+            max_seq_len=max_seq,
+            prefill_bucket=min(32, max(8, args.prompt_len)),
+        ),
+        engine=eng, seed=args.seed,
     )
+    print(f"kv pool: {server.cache.allocator.num_pages} pages x "
+          f"{args.page_size} tokens, {server.cache.kv_bytes() / 1e6:.2f} MB")
+    server.warmup(lens)
+    for ln in lens:
+        server.submit(
+            rng.integers(0, cfg.vocab_size, size=ln),
+            max_new_tokens=args.max_new, sampling=sampling,
+        )
+    results = server.run()
+    s = server.stats
+    print(f"continuous: {len(results)} requests, {s.decode_tokens} decode "
+          f"tokens in {s.decode_steps} steps over {args.num_slots} slots")
+    print(f"steady-state decode: {s.decode_tok_s:.1f} tok/s, "
+          f"engine utilization {s.utilization:.0%}")
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"  req {rid}: prompt {r.prompt_len:>3} -> "
+              f"{r.num_generated} tokens ({r.finish_reason}): "
+              f"{r.out_tokens}")
 
 
 if __name__ == "__main__":

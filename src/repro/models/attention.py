@@ -12,6 +12,16 @@ One implementation serves training, prefill and decode:
     decode shape tractable for the hybrid archs), and it is stored in the
     policy's fp8 format when enabled (the paper's fp8-storage /
     16-bit-compute split applied to serving).
+
+Two cache layouts share the same online-softmax core:
+  - the ring buffer above (static-batch serving: every sequence at the same
+    position), and
+  - a paged pool (``repro.serving`` continuous batching): per-layer K/V live
+    in one flat (n_pages * page_size, Hkv, hd) token pool, each request owns
+    a page table, and the layer writes/reads through precomputed slot
+    mappings (:class:`PagedInfo`). Positions and masks are then per-row
+    (``(B, S)``) rather than shared, since every slot decodes at its own
+    sequence length.
 """
 from __future__ import annotations
 
@@ -26,6 +36,28 @@ from repro.models import common
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 POS_SENTINEL = jnp.iinfo(jnp.int32).max // 2  # marks unwritten cache slots
+
+
+class PagedInfo(NamedTuple):
+    """Slot mappings for one step over the paged KV pool (repro.serving).
+
+    The indices are layer-invariant (every layer shares the page table), so
+    the serving step computes them once and the stack threads them through as
+    loop-invariant closure state.
+
+    write_idx: (B*Sq,) flat token index into the pool's token axis for each
+        fresh key/value; pad rows and inactive slots point into the null
+        page (page 0), which is never read back as valid.
+    read_idx: (B, L) flat pool indices covering each slot's page table in
+        position order (decode), or None to attend over the fresh k/v
+        (single-shot prefill).
+    k_pos: key positions matching read_idx — (B, L) with POS_SENTINEL at
+        invalid entries; when read_idx is None, (B, Sq) over the fresh keys.
+    """
+
+    write_idx: jnp.ndarray
+    read_idx: jnp.ndarray | None
+    k_pos: jnp.ndarray
 
 
 class AttnConfig(NamedTuple):
@@ -97,14 +129,21 @@ def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, engine: Engine,
                       causal=True, mesh_ctx=None):
     """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd). Online softmax over Sk chunks.
 
-    q_pos: (Sq,) absolute positions of queries; k_pos: (Sk,) absolute
-    positions of keys (POS_SENTINEL = invalid slot). Returns (B, Sq, Hq, hd).
+    q_pos: (Sq,) or (B, Sq) absolute positions of queries; k_pos: (Sk,) or
+    (B, Sk) positions of keys (POS_SENTINEL = invalid slot). 2D positions
+    give every batch row its own mask — the continuous-batching decode path,
+    where each slot sits at a different sequence length.
+    Returns (B, Sq, Hq, hd).
     """
     b, sq, hq, hd = q.shape
     sk = k.shape[1]
     hkv = cfg.n_kv_heads
     g = hq // hkv
     scale = 1.0 / math.sqrt(hd)
+    # (1, S) for shared positions, (B, S) for per-row; masks broadcast, so
+    # the shared case never materializes per-batch masks.
+    q_pos = jnp.atleast_2d(q_pos)
+    k_pos = jnp.atleast_2d(k_pos)
 
     qh = q.reshape(b, sq, hkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,Sq,hd)
     kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, hd)
@@ -123,25 +162,25 @@ def _online_attention(q, k, v, q_pos, k_pos, cfg: AttnConfig, engine: Engine,
     if pad:
         kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=POS_SENTINEL)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=POS_SENTINEL)
     kh = kh.reshape(b, hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
     vh = vh.reshape(b, hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
-    k_pos_c = k_pos.reshape(n_chunks, chunk)
+    k_pos_c = k_pos.reshape(k_pos.shape[0], n_chunks, chunk).transpose(1, 0, 2)
 
     def step(carry, xs):
         m_prev, l_prev, acc = carry
-        kc, vc, kp = xs  # (B, Hkv, C, hd) x2, (C,)
+        kc, vc, kp = xs  # (B, Hkv, C, hd) x2, (B|1, C)
         s = engine.matmul(qh, jnp.swapaxes(kc, -1, -2)[:, :, None])
         s = s.astype(jnp.float32) * scale
         s = common.softcap(s, cfg.softcap)
-        valid = kp[None, :] != POS_SENTINEL  # (1, C)
+        valid = kp[:, None, :] != POS_SENTINEL  # (B|1, 1, C)
         if causal:
-            mask = (kp[None, :] <= q_pos[:, None]) & valid
+            mask = (kp[:, None, :] <= q_pos[:, :, None]) & valid
         else:
-            mask = jnp.broadcast_to(valid, (sq, kp.shape[0]))
+            mask = valid
         if cfg.window is not None:
-            mask &= kp[None, :] > q_pos[:, None] - cfg.window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = mask & (kp[:, None, :] > q_pos[:, :, None] - cfg.window)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -178,12 +217,16 @@ def apply(
     cross_kv: tuple | None = None,
     causal: bool = True,
     mesh_ctx=None,
+    paged: PagedInfo | None = None,
 ):
-    """Full attention layer. x: (B, S, D); positions: (S,) absolute.
+    """Full attention layer. x: (B, S, D); positions: (S,) absolute, or
+    (B, S) when every row sits at its own position (paged decode).
 
     cache (decode/prefill): {"k": (B, Smax, Hkv, hd), "v": ..., "pos": (Smax,),
     "index": ()} — ring buffer; writes of length S must not cross the ring
     boundary (always true: prefill starts at 0, decode writes length 1).
+    With ``paged`` set, cache is instead the layer's flat token pool
+    {"kp": (N, Hkv, hd), "vp": ...} written/read through the slot mappings.
     cross_kv: precomputed (k, v, k_pos) for encoder-decoder cross-attention.
     """
     engine = as_engine(engine)
@@ -192,14 +235,28 @@ def apply(
     if cross_kv is None:
         k = _split_heads(common.dense_apply(params["k"], x, engine), cfg.n_kv_heads, cfg.head_dim)
         v = _split_heads(common.dense_apply(params["v"], x, engine), cfg.n_kv_heads, cfg.head_dim)
-        pos2d = jnp.broadcast_to(positions[None, :], (b, s))
+        pos2d = jnp.broadcast_to(jnp.atleast_2d(positions), (b, s))
         q = common.apply_rope(q, pos2d, cfg.rope_theta, cfg.rope_fraction)
         k = common.apply_rope(k, pos2d, cfg.rope_theta, cfg.rope_fraction)
     else:
         k, v, cross_pos = cross_kv
 
     new_cache = None
-    if cache is not None and cross_kv is None:
+    if paged is not None and cache is not None and cross_kv is None:
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        ck = cache["kp"].at[paged.write_idx].set(
+            k.reshape(b * s, hkv, hd).astype(cache["kp"].dtype)
+        )
+        cv = cache["vp"].at[paged.write_idx].set(
+            v.reshape(b * s, hkv, hd).astype(cache["vp"].dtype)
+        )
+        new_cache = {"kp": ck, "vp": cv}
+        if paged.read_idx is not None:
+            # Decode: gather every slot's pages in position order.
+            k = ck[paged.read_idx].astype(engine.policy.compute)
+            v = cv[paged.read_idx].astype(engine.policy.compute)
+        k_pos = paged.k_pos
+    elif cache is not None and cross_kv is None:
         max_len = cache["k"].shape[1]
         if s > 1:
             # Single-shot prefill (from position 0): attend over the fresh
@@ -256,4 +313,14 @@ def init_cache(batch: int, max_len: int, cfg: AttnConfig, dtype) -> dict:
         "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
         "pos": jnp.full((max_len,), POS_SENTINEL, jnp.int32),
         "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_paged_pool(n_tokens: int, cfg: AttnConfig, dtype) -> dict:
+    """One layer's flat KV token pool (n_pages * page_size slots), shared by
+    every request through per-slot page tables (repro.serving)."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "kp": jnp.zeros((n_tokens, hkv, hd), dtype),
+        "vp": jnp.zeros((n_tokens, hkv, hd), dtype),
     }

@@ -199,7 +199,7 @@ class Transformer:
     # -- block application ---------------------------------------------------
     def _apply_block(
         self, kind, p, x, positions, engine, *, cache=None, enc_out=None,
-        enc_pos=None, causal=True, decode=False,
+        enc_pos=None, causal=True, decode=False, paged=None,
     ):
         cfg = self.cfg
         new_cache = {} if cache is not None else None
@@ -209,7 +209,7 @@ class Transformer:
             h, ac = attention.apply(
                 p["attn"], h, positions, acfg, engine,
                 cache=None if cache is None else cache["attn"],
-                causal=causal, mesh_ctx=self.mesh_ctx,
+                causal=causal, mesh_ctx=self.mesh_ctx, paged=paged,
             )
             if new_cache is not None:
                 new_cache["attn"] = ac
@@ -278,7 +278,7 @@ class Transformer:
 
     def _run_stack(
         self, stack, x, positions, engine, *, cache=None, enc_out=None,
-        enc_pos=None, causal=True, decode=False,
+        enc_pos=None, causal=True, decode=False, paged=None,
     ):
         """Scan the stacked units, then the remainder blocks."""
         n_units = self.n_units if stack is not None else 0
@@ -292,7 +292,7 @@ class Transformer:
                     kind, unit_p[f"b{j}"], x, positions, engine,
                     cache=None if unit_c is None else unit_c[f"b{j}"],
                     enc_out=enc_out, enc_pos=enc_pos, causal=causal,
-                    decode=decode,
+                    decode=decode, paged=paged,
                 )
                 if new_c is not None:
                     new_c[f"b{j}"] = c
@@ -329,6 +329,7 @@ class Transformer:
                 kind, stack["rem"][f"r{i}"], x, positions, engine,
                 cache=None if cache is None else cache["rem"][f"r{i}"],
                 enc_out=enc_out, enc_pos=enc_pos, causal=causal, decode=decode,
+                paged=paged,
             )
             aux_total += aux
             new_rem[f"r{i}"] = c
@@ -453,6 +454,112 @@ class Transformer:
         }
         return {"pos": jnp.zeros((), jnp.int32), "units": units, "rem": rem,
                 "enc_pos": jnp.arange(max(cross_len, 1), dtype=jnp.int32)}
+
+    # -- paged serving (repro.serving continuous batching) ---------------------
+    def supports_paged(self) -> bool:
+        """The paged-pool serving path covers pure-attention decoders (dense
+        or MoE FFN). Recurrent kinds keep per-sequence states (nothing to
+        page) and right-padded prefill would corrupt them; enc-dec/VLM need
+        modality prefixes. Those families stay on the static-batch path."""
+        return (
+            not self.cfg.is_encoder_decoder
+            and self.cfg.family not in ("vlm", "audio")
+            and all(k in ("attn", "attn_local") for k in self.pattern)
+        )
+
+    def init_paged_pools(self, num_pages: int, page_size: int):
+        """Per-layer flat KV token pools of num_pages * page_size slots
+        (page 0 is the serving layer's null page). Same {units, rem} layout
+        as ``init_cache`` so ``_run_stack`` threads them unchanged."""
+        if not self.supports_paged():
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged serving needs a pure-attention "
+                f"decoder (pattern={self.pattern}, family={self.cfg.family}); "
+                "use the static-batch path (make_serve_steps)"
+            )
+        n_tok = num_pages * page_size
+
+        def block_pool(kind):
+            return {"attn": attention.init_paged_pool(
+                n_tok, self.attn_cfg(kind), self.kv_dtype
+            )}
+
+        def unit_pool(_):
+            return {
+                f"b{j}": block_pool(kind)
+                for j, kind in enumerate(self.pattern)
+            }
+
+        units = jax.vmap(unit_pool)(jnp.arange(self.n_units)) if self.n_units else None
+        rem = {
+            f"r{i}": block_pool(self.pattern[i % len(self.pattern)])
+            for i in range(self.n_rem)
+        }
+        return {"units": units, "rem": rem}
+
+    def prefill_paged(self, params, tokens, pools, page_row, length, *,
+                      page_size: int, engine: Engine | None = None):
+        """Single-request prefill into the paged pool.
+
+        tokens: (1, Tb) right-padded prompt; page_row: (P,) this slot's page
+        ids; length: () valid prompt length. Pad rows compute garbage that
+        never escapes: their keys are masked (POS_SENTINEL) and their K/V
+        writes land in the null page. Returns (logits (1, V) at position
+        length-1, new pools).
+        """
+        eng = as_engine(engine) if engine is not None else self.engine
+        b, s = tokens.shape
+        tok = jnp.arange(s, dtype=jnp.int32)
+        valid = tok < length
+        write_idx = jnp.where(
+            valid, page_row[tok // page_size] * page_size + tok % page_size, 0
+        )
+        k_pos = jnp.where(valid, tok, attention.POS_SENTINEL)[None]
+        paged = attention.PagedInfo(write_idx=write_idx, read_idx=None, k_pos=k_pos)
+        x = self.embed(params, tokens, engine=eng)
+        positions = jnp.broadcast_to(tok[None], (b, s))
+        x, new_pools, _ = self._run_stack(
+            params["decoder"], x, positions, eng, cache=pools, paged=paged
+        )
+        x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
+        x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        logits = self.logits(params, x_last, engine=eng)
+        return logits[:, 0], new_pools
+
+    def decode_paged(self, params, tokens, pools, page_table, seq_lens, *,
+                     page_size: int, engine: Engine | None = None):
+        """Slot-batched one-token decode over the paged pool.
+
+        tokens: (S, 1) last sampled token per slot; page_table: (S, P) page
+        ids in position order; seq_lens: (S,) tokens already cached per slot
+        (= the new token's position). Inactive slots (zeroed page-table row,
+        seq_len 0) write to the null page and produce discarded logits, so
+        the step stays one fixed shape regardless of which slots are live.
+        Returns (logits (S, V), new pools).
+        """
+        eng = as_engine(engine) if engine is not None else self.engine
+        n_slots = tokens.shape[0]
+        positions = seq_lens[:, None]  # (S, 1): per-slot decode position
+        cur_page = jnp.take_along_axis(
+            page_table, (seq_lens // page_size)[:, None], axis=1
+        )[:, 0]
+        write_idx = cur_page * page_size + seq_lens % page_size
+        n_tok = page_table.shape[1] * page_size
+        read_idx = (
+            page_table[:, :, None] * page_size
+            + jnp.arange(page_size, dtype=jnp.int32)[None, None, :]
+        ).reshape(n_slots, n_tok)
+        lpos = jnp.arange(n_tok, dtype=jnp.int32)[None]
+        k_pos = jnp.where(lpos <= seq_lens[:, None], lpos, attention.POS_SENTINEL)
+        paged = attention.PagedInfo(write_idx=write_idx, read_idx=read_idx, k_pos=k_pos)
+        x = self.embed(params, tokens, engine=eng)
+        x, new_pools, _ = self._run_stack(
+            params["decoder"], x, positions, eng, cache=pools, decode=True,
+            paged=paged,
+        )
+        x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
+        logits = self.logits(params, x, engine=eng)
+        return logits[:, 0], new_pools
 
     def prefill(self, params, batch, cache, *, engine: Engine | None = None):
         """Run the prompt through the decoder, filling caches."""

@@ -1,0 +1,59 @@
+"""repro.serving: continuous-batching inference on a paged fp8-capable
+KV-cache pool.
+
+The paper keeps its CE array at 99.4% utilization by double-buffering tiles
+so the datapath never starves; the serving-side analogue is continuous
+batching — keep the decode GEMMs fed with a full slot batch even as
+requests of different lengths arrive and finish. See docs/DESIGN.md
+(Serving section) for the scheduler state machine and page-table layout.
+
+    from repro.serving import Server, ServerConfig, SamplingParams
+
+    server = Server(model, params, ServerConfig(num_slots=8, page_size=16))
+    server.submit(prompt_tokens, max_new_tokens=64)
+    for ev in server.stream():
+        print(ev.rid, ev.token)
+"""
+from repro.serving.cache import NULL_PAGE, OutOfPagesError, PagedKVCache, PagePool
+from repro.serving.sampling import GREEDY, SamplingParams, sample_logits, stack_params
+from repro.serving.scheduler import (
+    FINISH_EOS,
+    FINISH_LENGTH,
+    FINISHED,
+    QUEUED,
+    RUNNING,
+    Request,
+    Scheduler,
+)
+from repro.serving.server import (
+    Server,
+    ServerConfig,
+    ServerStats,
+    StaticStats,
+    TokenEvent,
+    generate_static,
+)
+
+__all__ = [
+    "FINISH_EOS",
+    "FINISH_LENGTH",
+    "FINISHED",
+    "GREEDY",
+    "NULL_PAGE",
+    "OutOfPagesError",
+    "PagePool",
+    "PagedKVCache",
+    "QUEUED",
+    "RUNNING",
+    "Request",
+    "SamplingParams",
+    "Scheduler",
+    "Server",
+    "ServerConfig",
+    "ServerStats",
+    "StaticStats",
+    "TokenEvent",
+    "generate_static",
+    "sample_logits",
+    "stack_params",
+]

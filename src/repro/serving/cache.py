@@ -1,0 +1,139 @@
+"""Paged KV-cache pool: fixed-size pages, a free-list allocator, and
+per-request page tables.
+
+The device side is one flat (num_pages * page_size, Hkv, hd) token pool per
+attention layer (``Transformer.init_paged_pools``), optionally stored in the
+paper's E4M3 format via the existing ``kv_cache_dtype`` plumbing. The host
+side is this module: a free-list :class:`PagePool` plus the
+:class:`PagedKVCache` wrapper that mirrors the page table and sequence
+lengths as numpy arrays the scheduler mutates between jitted steps.
+
+Page 0 is the **null page**: never handed out, it absorbs the K/V writes of
+prompt padding and inactive slots so every step keeps one fixed shape. Its
+contents are never read back as valid (key positions carry POS_SENTINEL).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class OutOfPagesError(RuntimeError):
+    """Raised when an allocation exceeds the free list; the scheduler's
+    admission control reserves worst-case pages so running requests never
+    hit this — only unadmitted work can."""
+
+
+class PagePool:
+    """Host-side free-list allocator over ``num_pages`` fixed-size pages.
+
+    LIFO free list: recycled pages are reused first, keeping the hot region
+    of the device pool small. All methods are O(n) host ops that run between
+    jitted steps, never inside them.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._held: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        return len(self._held)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache slots."""
+        return max(0, -(-n_tokens // self.page_size))
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfPagesError(
+                f"requested {n} pages, {len(self._free)} free "
+                f"(of {self.num_pages - 1} allocatable)"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"page {p} is not currently allocated")
+            self._held.remove(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device pools + the host mirror of the page table / sequence lengths.
+
+    ``page_table[slot]`` lists the slot's pages in position order (token t
+    lives in page ``page_table[slot, t // page_size]`` at offset
+    ``t % page_size``); unused tail entries stay NULL_PAGE. ``seq_lens``
+    counts tokens already cached per slot. Both are numpy so the scheduler
+    mutates them in place; the server ships them to the device per step.
+    """
+
+    pools: Any  # model pytree of per-layer {"kp", "vp"} token pools
+    page_table: np.ndarray  # (num_slots, pages_per_slot) int32
+    seq_lens: np.ndarray  # (num_slots,) int32
+    allocator: PagePool
+
+    @classmethod
+    def build(cls, model, *, num_slots: int, num_pages: int, page_size: int,
+              pages_per_slot: int, pools=None) -> "PagedKVCache":
+        """``pools`` reuses existing device pools (Server.reset) instead of
+        allocating fresh zeros — stale K/V are never read back as valid."""
+        return cls(
+            pools=(pools if pools is not None
+                   else model.init_paged_pools(num_pages, page_size)),
+            page_table=np.zeros((num_slots, pages_per_slot), np.int32),
+            seq_lens=np.zeros((num_slots,), np.int32),
+            allocator=PagePool(num_pages, page_size),
+        )
+
+    @property
+    def num_slots(self) -> int:
+        return self.page_table.shape[0]
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.allocator.page_size
+
+    def set_pages(self, slot: int, pages: list[int]) -> None:
+        row = np.zeros((self.pages_per_slot,), np.int32)
+        row[: len(pages)] = pages
+        self.page_table[slot] = row
+
+    def append_page(self, slot: int, index: int, page: int) -> None:
+        self.page_table[slot, index] = page
+
+    def reset_slot(self, slot: int) -> None:
+        self.page_table[slot] = NULL_PAGE
+        self.seq_lens[slot] = 0
+
+    def kv_bytes(self) -> int:
+        """Device bytes held by the KV pools (the fp8-vs-bf16 observable)."""
+        return sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves(self.pools)
+            if hasattr(x, "dtype")
+        )

@@ -1,0 +1,191 @@
+"""Continuous-batching scheduler: request queue, admission control, slot
+recycling.
+
+State machine (docs/DESIGN.md Serving section):
+
+    QUEUED --admit--> RUNNING --finish--> FINISHED
+             (slot free + pages reserved + token budget)
+
+A request is admitted when (a) a decode slot is free, (b) the page pool can
+cover its **worst case** (prompt + max_new_tokens, clamped to the slot
+capacity) on top of what already-running requests may still claim, and
+(c) the in-flight token budget has room. Reserving worst-case pages at
+admission means a running request can never fail a mid-decode page
+allocation — the software analogue of RedMulE's double-buffering guarantee
+that the datapath never stalls on a late operand: admission is the only
+place the pipeline may wait.
+
+Admission is FIFO without skipping: if the head of the queue does not fit,
+nothing behind it jumps ahead (no starvation of large requests).
+
+The scheduler owns request bookkeeping and the page allocator; the device
+arrays (pools, page table, seq_lens) live in ``PagedKVCache`` and are
+written by the server that drives the jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+from repro.serving.cache import PagePool
+from repro.serving.sampling import GREEDY, SamplingParams
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+FINISH_EOS = "eos"
+FINISH_LENGTH = "length"
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+
+    prompt: list[int]
+    max_new_tokens: int = 32
+    sampling: SamplingParams = GREEDY
+    eos_id: Optional[int] = None
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+
+    # Runtime state (scheduler-owned).
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    pages: list[int] = dataclasses.field(default_factory=list)
+    status: str = QUEUED
+    finish_reason: Optional[str] = None
+    # prompt + generation cap after clamping to cache capacity (set on submit).
+    max_total: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.out_tokens)
+
+
+class Scheduler:
+    def __init__(self, *, num_slots: int, pool: PagePool, pages_per_slot: int,
+                 max_seq_len: Optional[int] = None,
+                 token_budget: Optional[int] = None):
+        self.pool = pool
+        self.pages_per_slot = pages_per_slot
+        slot_cap = pages_per_slot * pool.page_size
+        self.max_seq_len = min(max_seq_len or slot_cap, slot_cap)
+        # Cap on sum(max_total) over running requests; defaults to the whole
+        # pool so pages stay the binding constraint unless narrowed.
+        self.token_budget = token_budget
+        self.queue: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self._free_slots = list(range(num_slots - 1, -1, -1))
+        self.completed = 0
+
+    # -- introspection -----------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.queue or self.running)
+
+    @property
+    def num_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def _reserved_unallocated(self) -> int:
+        """Pages running requests may still claim (worst case minus held)."""
+        return sum(
+            self.pool.pages_for(r.max_total) - len(r.pages)
+            for r in self.running.values()
+        )
+
+    def _inflight_tokens(self) -> int:
+        return sum(r.max_total for r in self.running.values())
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, request: Request) -> Request:
+        if request.prompt_len < 1:
+            raise ValueError("empty prompt")
+        request.max_total = min(
+            request.prompt_len + request.max_new_tokens, self.max_seq_len
+        )
+        if request.prompt_len >= self.max_seq_len:
+            raise ValueError(
+                f"prompt of {request.prompt_len} tokens leaves no room to "
+                f"generate under max_seq_len={self.max_seq_len}"
+            )
+        worst = self.pool.pages_for(request.max_total)
+        if worst > self.pool.num_pages - 1:
+            raise ValueError(
+                f"request needs {worst} pages; pool has {self.pool.num_pages - 1}"
+            )
+        if self.token_budget is not None and request.max_total > self.token_budget:
+            raise ValueError(
+                f"request of {request.max_total} tokens exceeds the "
+                f"token budget of {self.token_budget}"
+            )
+        request.status = QUEUED
+        self.queue.append(request)
+        return request
+
+    def admit(self) -> list[Request]:
+        """Move queue heads into free slots while pages + budget allow.
+        Allocates each admitted request's prompt pages; the caller prefills."""
+        admitted = []
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            worst = self.pool.pages_for(req.max_total)
+            if self.pool.num_free - self._reserved_unallocated() < worst:
+                break
+            if (
+                self.token_budget is not None
+                and self._inflight_tokens() + req.max_total > self.token_budget
+            ):
+                break
+            self.queue.popleft()
+            req.slot = self._free_slots.pop()
+            req.pages = self.pool.alloc(self.pool.pages_for(req.prompt_len))
+            req.status = RUNNING
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    # -- token commit / recycling -----------------------------------------
+    def commit(self, req: Request, token: int) -> bool:
+        """Record one sampled token; returns True when the request finished
+        (EOS, generation cap, or cache capacity)."""
+        req.out_tokens.append(token)
+        if req.eos_id is not None and token == req.eos_id:
+            req.finish_reason = FINISH_EOS
+        elif (
+            req.num_generated >= req.max_new_tokens
+            or req.prompt_len + req.num_generated >= req.max_total
+        ):
+            req.finish_reason = FINISH_LENGTH
+        return req.finish_reason is not None
+
+    def ensure_page(self, req: Request, position: int) -> Optional[tuple[int, int]]:
+        """Grow the request's page list to cover a cache write at
+        ``position``. Returns (index, page) when a page was appended — the
+        caller mirrors it into the device page table. Cannot fail for
+        admitted requests (worst-case pages were reserved)."""
+        idx = position // self.pool.page_size
+        if idx < len(req.pages):
+            return None
+        assert idx == len(req.pages), "cache positions grow one page at a time"
+        (page,) = self.pool.alloc(1)
+        req.pages.append(page)
+        return idx, page
+
+    def finish(self, req: Request) -> None:
+        """Release the request's slot and pages (recycling them for the
+        queue) and mark it finished."""
+        assert req.slot is not None
+        del self.running[req.slot]
+        self._free_slots.append(req.slot)
+        self.pool.free(req.pages)
+        req.pages = []
+        req.status = FINISHED
+        self.completed += 1

@@ -1,0 +1,328 @@
+"""The serving loop: jit-friendly fixed-shape steps driven by the
+continuous-batching scheduler.
+
+Layout of one ``Server.step()``:
+
+  1. admit queued requests into free slots (pages + budget permitting) and
+     prefill each one (one jit call per prompt-length bucket, batch 1),
+     sampling its first token from the prefill logits;
+  2. run ONE decode step over every slot — active or not — through the
+     paged pool (gather/scatter over slot mappings, shapes never change),
+     sample one token per slot, commit the active ones, recycle finished
+     slots.
+
+Tokens stream out as :class:`TokenEvent`s the moment they are sampled.
+
+The static-batch path (:func:`generate_static`) lives here too: it is the
+baseline the benchmarks compare against and the single implementation behind
+``launch/serve.py`` / ``examples/serve_decode.py`` (which used to carry
+copy-pasted decode loops). Both paths separate compile time from steady-state
+time — reported tok/s never includes tracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import make_paged_serve_steps, make_serve_steps
+from repro.serving.cache import PagedKVCache
+from repro.serving.sampling import (
+    GREEDY,
+    SamplingParams,
+    sample_logits,
+    stack_params,
+)
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Sizing of the serving engine (all shapes derive from these)."""
+
+    num_slots: int = 4  # concurrent decode lanes (the fixed batch)
+    page_size: int = 16  # tokens per KV page
+    max_seq_len: int = 256  # per-request prompt + generation cap
+    # Total pages in the pool incl. the null page; default covers every slot
+    # at worst case so admission is gated by slots, not pages.
+    num_pages: Optional[int] = None
+    token_budget: Optional[int] = None  # cap on sum(max_total) in flight
+    prefill_bucket: int = 32  # prompts pad up to a multiple of this
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
+
+    @property
+    def resolved_num_pages(self) -> int:
+        if self.num_pages is not None:
+            return self.num_pages
+        return self.num_slots * self.pages_per_slot + 1
+
+    def bucket(self, prompt_len: int) -> int:
+        b = self.prefill_bucket
+        return -(-prompt_len // b) * b
+
+
+class TokenEvent(NamedTuple):
+    """One streamed token: emitted by ``step()`` as soon as it is sampled."""
+
+    rid: int
+    token: int
+    index: int  # position within the generated sequence
+    finished: bool
+    finish_reason: Optional[str]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    prefill_calls: int = 0
+    prefill_tokens: int = 0  # valid prompt tokens prefilled
+    decode_steps: int = 0
+    decode_tokens: int = 0  # tokens sampled for *active* slots
+    slot_steps: int = 0  # decode_steps * num_slots (capacity offered)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of offered decode-lane steps that produced a token —
+        the serving analogue of the paper's CE-array utilization."""
+        return self.decode_tokens / self.slot_steps if self.slot_steps else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+
+class Server:
+    """Continuous-batching inference server over a paged KV-cache pool."""
+
+    def __init__(self, model, params, config: ServerConfig = ServerConfig(), *,
+                 engine=None, backend: Optional[str] = None, seed: int = 0):
+        if not model.supports_paged():
+            raise NotImplementedError(
+                f"{model.cfg.name}: continuous batching needs the paged "
+                "attention path; use generate_static for this family"
+            )
+        self.model = model
+        self.params = params
+        self.config = config
+        self.seed = seed
+        prefill_step, decode_step = make_paged_serve_steps(
+            model, page_size=config.page_size, engine=engine, backend=backend,
+        )
+        self._prefill = jax.jit(prefill_step)
+        self._decode = jax.jit(decode_step)
+        self._sample = jax.jit(sample_logits)
+        self._fresh_state()
+
+    def _fresh_state(self, pools=None) -> None:
+        cfg = self.config
+        self.cache = PagedKVCache.build(
+            self.model, num_slots=cfg.num_slots,
+            num_pages=cfg.resolved_num_pages, page_size=cfg.page_size,
+            pages_per_slot=cfg.pages_per_slot, pools=pools,
+        )
+        self.scheduler = Scheduler(
+            num_slots=cfg.num_slots, pool=self.cache.allocator,
+            pages_per_slot=cfg.pages_per_slot, max_seq_len=cfg.max_seq_len,
+            token_budget=cfg.token_budget,
+        )
+        self.stats = ServerStats()
+        self.results: dict[int, Request] = {}
+        self._key = jax.random.PRNGKey(self.seed)
+
+    def reset(self) -> None:
+        """Drop all serving state (keeps compiled steps and the pools —
+        stale K/V are never read back as valid)."""
+        self._fresh_state(pools=self.cache.pools)
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt: Iterable[int], *, max_new_tokens: int = 32,
+               sampling: SamplingParams = GREEDY,
+               eos_id: Optional[int] = None) -> Request:
+        return self.scheduler.submit(Request(
+            prompt=[int(t) for t in prompt], max_new_tokens=max_new_tokens,
+            sampling=sampling, eos_id=eos_id,
+        ))
+
+    # -- the step loop -----------------------------------------------------
+    def step(self) -> list[TokenEvent]:
+        """One scheduler iteration: admit + prefill, then one decode over
+        all slots. Returns the tokens produced (possibly empty)."""
+        events: list[TokenEvent] = []
+        for req in self.scheduler.admit():
+            self._prefill_one(req, events)
+        if self.scheduler.running:
+            self._decode_once(events)
+        return events
+
+    def run(self) -> dict[int, Request]:
+        """Drain the queue; returns {rid: finished Request}."""
+        while self.scheduler.has_work():
+            self.step()
+        return dict(self.results)
+
+    def stream(self):
+        """Generator over TokenEvents until all submitted work finishes."""
+        while self.scheduler.has_work():
+            yield from self.step()
+
+    def warmup(self, prompt_lens: Iterable[int], max_new_tokens: int = 2) -> None:
+        """Compile the decode/sampling steps and every prefill bucket the
+        given prompt lengths hit, then reset serving state — so a timed run
+        right after measures steady state only. Warm prompts reuse the real
+        lengths (one per distinct bucket), so any length a later submit
+        accepts has its bucket compiled here."""
+        seen: set[int] = set()
+        for pl in prompt_lens:
+            tb = self.config.bucket(pl)
+            if tb in seen:
+                continue
+            seen.add(tb)
+            self.submit([1] * pl, max_new_tokens=max_new_tokens)
+        self.run()
+        self.reset()
+
+    # -- internals ---------------------------------------------------------
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _prefill_one(self, req: Request, events: list[TokenEvent]) -> None:
+        cfg = self.config
+        t = req.prompt_len
+        tb = cfg.bucket(t)
+        toks = np.zeros((1, tb), np.int32)
+        toks[0, :t] = req.prompt
+        page_row = np.zeros((cfg.pages_per_slot,), np.int32)
+        page_row[: len(req.pages)] = req.pages
+        t0 = time.perf_counter()
+        logits, pools = self._prefill(
+            self.params, jnp.asarray(toks), self.cache.pools,
+            jnp.asarray(page_row), jnp.int32(t),
+        )
+        jax.block_until_ready(logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.cache.pools = pools
+        self.cache.set_pages(req.slot, req.pages)
+        self.cache.seq_lens[req.slot] = t
+        self.stats.prefill_calls += 1
+        self.stats.prefill_tokens += t
+        sp = stack_params([req.sampling])
+        tok = self._sample(logits, self._next_key(), **sp)
+        self._commit(req, int(tok[0]), events)
+
+    def _decode_once(self, events: list[TokenEvent]) -> None:
+        running = list(self.scheduler.running.items())
+        for slot, req in running:
+            grown = self.scheduler.ensure_page(req, int(self.cache.seq_lens[slot]))
+            if grown is not None:
+                self.cache.append_page(slot, *grown)
+        n = self.cache.num_slots
+        tokens = np.zeros((n, 1), np.int32)
+        params_list = [GREEDY] * n
+        for slot, req in running:
+            tokens[slot, 0] = req.out_tokens[-1]
+            params_list[slot] = req.sampling
+        t0 = time.perf_counter()
+        logits, pools = self._decode(
+            self.params, jnp.asarray(tokens), self.cache.pools,
+            jnp.asarray(self.cache.page_table), jnp.asarray(self.cache.seq_lens),
+        )
+        sp = stack_params(params_list)
+        toks = np.asarray(self._sample(logits, self._next_key(), **sp))
+        self.stats.decode_s += time.perf_counter() - t0
+        self.cache.pools = pools
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += n
+        self.stats.decode_tokens += len(running)
+        for slot, req in running:
+            self.cache.seq_lens[slot] += 1
+            self._commit(req, int(toks[slot]), events)
+
+    def _commit(self, req: Request, token: int, events: list[TokenEvent]) -> None:
+        finished = self.scheduler.commit(req, token)
+        events.append(TokenEvent(
+            rid=req.rid, token=token, index=req.num_generated - 1,
+            finished=finished, finish_reason=req.finish_reason,
+        ))
+        if finished:
+            slot = req.slot
+            self.scheduler.finish(req)
+            self.cache.reset_slot(slot)
+            self.results[req.rid] = req
+
+
+# -- static-batch reference path ---------------------------------------------
+
+class StaticStats(NamedTuple):
+    prefill_s: float
+    first_decode_s: float  # includes compile; excluded from tok/s
+    steady_s: float
+    steady_steps: int
+    batch: int
+
+    @property
+    def decode_tok_s(self) -> float:
+        if not self.steady_steps or not self.steady_s:
+            return 0.0
+        return self.batch * self.steady_steps / self.steady_s
+
+
+def generate_static(model, params, batch: dict, *, max_new_tokens: int,
+                    engine=None, backend: Optional[str] = None,
+                    sampling: SamplingParams = GREEDY, seed: int = 0):
+    """Static-batch generation on the ring-buffer cache: every sequence
+    shares one position, the batch runs until ``max_new_tokens`` regardless
+    of per-sequence needs. Returns (generated (B, max_new) np.ndarray,
+    :class:`StaticStats`); steady-state tok/s excludes the prefill and the
+    first (compiling) decode call.
+    """
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    prefill_step, decode_step = make_serve_steps(model, engine=engine, backend=backend)
+    max_len = t + max_new_tokens
+    prefill = jax.jit(lambda p, bt: prefill_step(p, bt, max_len))
+    decode = jax.jit(decode_step)
+    sample = jax.jit(sample_logits)
+    key = jax.random.PRNGKey(seed)
+    sp = stack_params([sampling] * b)
+
+    def pick(logits, key):
+        return sample(logits, key, **sp)[:, None].astype(jnp.int32)
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    key, sub = jax.random.split(key)
+    tok = pick(logits[:, -1], sub)
+    jax.block_until_ready(tok)
+    prefill_s = time.perf_counter() - t0
+    out = [tok]
+
+    first_decode_s = steady_s = 0.0
+    steady_steps = 0
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        logits, cache = decode(params, tok, cache)
+        tok = pick(logits[:, 0], sub)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        if i == 0:
+            first_decode_s = dt
+        else:
+            steady_s += dt
+            steady_steps += 1
+        out.append(tok)
+    seqs = np.asarray(jnp.concatenate(out, axis=1))
+    return seqs, StaticStats(prefill_s, first_decode_s, steady_s, steady_steps, b)

@@ -2,6 +2,7 @@ from repro.training.loop import (
     TrainState,
     chunked_xent,
     make_loss_fn,
+    make_paged_serve_steps,
     make_serve_steps,
     make_train_step,
 )
@@ -10,6 +11,7 @@ __all__ = [
     "TrainState",
     "chunked_xent",
     "make_loss_fn",
+    "make_paged_serve_steps",
     "make_serve_steps",
     "make_train_step",
 ]

@@ -161,7 +161,8 @@ def make_train_step(model: Transformer, optimizer, *, anomaly_guard: bool = True
 
 def make_serve_steps(model: Transformer, *, engine: Engine | None = None,
                      backend: str | None = None):
-    """(prefill_step, decode_step) pair for serving."""
+    """(prefill_step, decode_step) pair for static-batch serving: every
+    sequence in the batch shares one position and one ring-buffer cache."""
     eng = resolve_engine(model, engine, backend)
 
     def prefill_step(params, batch, max_len: int):
@@ -174,5 +175,37 @@ def make_serve_steps(model: Transformer, *, engine: Engine | None = None,
     def decode_step(params, tokens, cache):
         with engine_scope(eng):
             return model.decode_step(params, tokens, cache, engine=eng)
+
+    return prefill_step, decode_step
+
+
+def make_paged_serve_steps(model: Transformer, *, page_size: int,
+                           engine: Engine | None = None,
+                           backend: str | None = None):
+    """Slot-aware (prefill_step, decode_step) pair over a paged KV pool —
+    the fixed-shape steps the continuous-batching scheduler drives
+    (``repro.serving``). Each decode covers every slot at its own length;
+    prefill fills one slot's pages from a right-padded prompt.
+
+    prefill_step(params, tokens (1, Tb), pools, page_row (P,), length ())
+        -> (logits (1, V), pools)
+    decode_step(params, tokens (S, 1), pools, page_table (S, P), seq_lens (S,))
+        -> (logits (S, V), pools)
+    """
+    eng = resolve_engine(model, engine, backend)
+
+    def prefill_step(params, tokens, pools, page_row, length):
+        with engine_scope(eng):
+            return model.prefill_paged(
+                params, tokens, pools, page_row, length,
+                page_size=page_size, engine=eng,
+            )
+
+    def decode_step(params, tokens, pools, page_table, seq_lens):
+        with engine_scope(eng):
+            return model.decode_paged(
+                params, tokens, pools, page_table, seq_lens,
+                page_size=page_size, engine=eng,
+            )
 
     return prefill_step, decode_step

@@ -260,6 +260,33 @@ def test_heuristic_blocks_clamp_to_problem():
     assert bk == 256
 
 
+def test_skinny_decode_blocks_clamp_block_m_to_m():
+    """Decode-time GEMMs (M in {1,2,4,8}) must not pad the M tile to a
+    training-size block: block_m == M exactly, with a deeper K tile."""
+    for m in (1, 2, 4, 8):
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn):
+            bm, bn, bk = tuning.heuristic_block_sizes(m, 4096, 4096, dt)
+            assert bm == m, (m, dt)
+            assert bn % 128 == 0
+            assert bk >= 256  # freed VMEM goes into the K tile
+    # resolve path preserves the skinny tile end to end
+    assert tuning.resolve_block_sizes(1, 256, 512, policy=FP32_REF)[0] == 1
+    # just above the skinny table, behavior is the legacy sublane round-up
+    assert tuning.heuristic_block_sizes(9, 4096, 4096, jnp.float32)[0] == 16
+
+
+def test_skinny_decode_gemm_matches_ref(rng):
+    """A one-row decode GEMM through the Pallas path with the auto-selected
+    bm=1 tile still computes the right thing."""
+    x = jnp.asarray(rng.standard_normal((1, 48)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((48, 20)).astype(np.float32))
+    z = ops.gemm_op(x, w, None, gop=semiring.MATMUL, policy=FP32_REF,
+                    backend="pallas_interpret")
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(x) @ np.asarray(w), rtol=1e-5, atol=1e-5
+    )
+
+
 def test_env_block_override(monkeypatch):
     monkeypatch.setenv("REPRO_BLOCK_MNK", "16,128,32")
     blocks = tuning.resolve_block_sizes(256, 256, 256, policy=FP32_REF)

@@ -1,0 +1,354 @@
+"""Serving subsystem tests (repro.serving).
+
+The load-bearing one is greedy token parity: continuous batching over the
+paged pool must produce, for every request, exactly the tokens the static
+ring-buffer path produces for that prompt alone — scheduling and cache
+layout are not allowed to change results.
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import (
+    FINISH_EOS,
+    FINISH_LENGTH,
+    OutOfPagesError,
+    PagePool,
+    Request,
+    SamplingParams,
+    Scheduler,
+    Server,
+    ServerConfig,
+    generate_static,
+    sample_logits,
+    stack_params,
+)
+
+
+def _fp32(cfg):
+    return dataclasses.replace(cfg, policy="fp32", kv_cache_dtype="fp32")
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = _fp32(get_config("granite-3-8b", smoke=True))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab_size, size=n)) for n in lens]
+
+
+# -- page allocator -----------------------------------------------------------
+
+def test_page_pool_alloc_free_recycle_properties():
+    """Randomized alloc/free interleavings keep the allocator's invariants:
+    no page handed out twice while held, page 0 never handed out, free
+    counts conserved, recycled pages reusable."""
+    rng = random.Random(1234)
+    pool = PagePool(num_pages=17, page_size=4)
+    held: list[list[int]] = []
+    ever_allocated = set()
+    for _ in range(500):
+        if held and rng.random() < 0.45:
+            pages = held.pop(rng.randrange(len(held)))
+            pool.free(pages)
+        else:
+            n = rng.randint(1, 4)
+            if n > pool.num_free:
+                with pytest.raises(OutOfPagesError):
+                    pool.alloc(n)
+                continue
+            pages = pool.alloc(n)
+            assert 0 not in pages, "null page must never be allocated"
+            ever_allocated.update(pages)
+            held.append(pages)
+        live = [p for ps in held for p in ps]
+        assert len(live) == len(set(live)), "double allocation"
+        assert pool.num_free + len(live) == pool.num_pages - 1
+    for pages in held:
+        pool.free(pages)
+    assert pool.num_free == pool.num_pages - 1
+    assert pool.num_held == 0
+    assert ever_allocated <= set(range(1, 17))
+
+
+def test_page_pool_errors():
+    pool = PagePool(num_pages=4, page_size=2)
+    pages = pool.alloc(3)
+    with pytest.raises(OutOfPagesError):
+        pool.alloc(1)
+    pool.free(pages[:1])
+    with pytest.raises(ValueError):
+        pool.free(pages[:1])  # double free
+    assert pool.pages_for(0) == 0
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(2) == 1
+    assert pool.pages_for(3) == 2
+    with pytest.raises(ValueError):
+        PagePool(num_pages=1, page_size=2)
+
+
+# -- scheduler ----------------------------------------------------------------
+
+def _scheduler(num_pages=9, page_size=4, num_slots=2, **kw):
+    pool = PagePool(num_pages=num_pages, page_size=page_size)
+    return Scheduler(num_slots=num_slots, pool=pool, pages_per_slot=4, **kw)
+
+
+def test_admission_reserves_worst_case_pages():
+    # 8 allocatable pages; each request may grow to 12 tokens = 3 pages.
+    sched = _scheduler(num_pages=9, page_size=4, num_slots=3, max_seq_len=12)
+    for _ in range(3):
+        sched.submit(Request(prompt=[1] * 6, max_new_tokens=6))
+    admitted = sched.admit()
+    # Worst case is 3 pages each: only two fit in 8 pages; slot 3 stays free.
+    assert len(admitted) == 2
+    assert sched.num_free_slots == 1
+    # Finishing one request frees its reservation; the third gets admitted.
+    sched.finish(admitted[0])
+    assert len(sched.admit()) == 1
+
+
+def test_admission_token_budget():
+    sched = _scheduler(num_pages=32, num_slots=4, max_seq_len=16,
+                       token_budget=24)
+    for _ in range(3):
+        sched.submit(Request(prompt=[1] * 4, max_new_tokens=8))  # max_total 12
+    assert len(sched.admit()) == 2  # 12 + 12 <= 24, third would overflow
+    tight = _scheduler(num_pages=32, num_slots=4, max_seq_len=16,
+                       token_budget=10)
+    with pytest.raises(ValueError):
+        tight.submit(Request(prompt=[1] * 4, max_new_tokens=8))  # 12 > 10
+
+
+def test_submit_validation():
+    sched = _scheduler(max_seq_len=16)
+    with pytest.raises(ValueError):
+        sched.submit(Request(prompt=[]))
+    with pytest.raises(ValueError):
+        sched.submit(Request(prompt=[1] * 16, max_new_tokens=4))  # no room
+
+
+def test_commit_finish_reasons():
+    sched = _scheduler(max_seq_len=16)
+    req = sched.submit(Request(prompt=[1, 2], max_new_tokens=2, eos_id=7))
+    (req,) = sched.admit()
+    assert not sched.commit(req, 3)
+    assert sched.commit(req, 3) and req.finish_reason == FINISH_LENGTH
+    req2 = sched.submit(Request(prompt=[1, 2], max_new_tokens=8, eos_id=7))
+    sched.finish(req)
+    (req2,) = sched.admit()
+    assert sched.commit(req2, 7) and req2.finish_reason == FINISH_EOS
+
+
+# -- continuous batching vs static parity ------------------------------------
+
+def test_continuous_matches_static_greedy(served_model):
+    """Greedy outputs under continuous batching exactly match the static
+    ring-buffer decode of each prompt on its own (fp32 policy)."""
+    cfg, model, params = served_model
+    lens = (5, 11, 7, 9)
+    gens = (6, 3, 8, 5)
+    prompts = _prompts(cfg, lens)
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=24, prefill_bucket=8,
+    ))
+    reqs = [server.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    results = server.run()
+    assert len(results) == len(reqs)
+    for p, g, r in zip(prompts, gens, reqs):
+        ref, _ = generate_static(
+            model, params, {"tokens": jnp.asarray([p], jnp.int32)},
+            max_new_tokens=g,
+        )
+        assert results[r.rid].out_tokens == list(ref[0]), f"prompt len {len(p)}"
+    # Everything recycled: no leaked pages or slots.
+    assert server.cache.allocator.num_held == 0
+    assert server.scheduler.num_free_slots == 2
+    assert (server.cache.page_table == 0).all()
+
+
+def test_continuous_matches_static_greedy_sliding_window():
+    """Same parity on a sliding-window arch (gemma2): the paged path holds
+    full-length pools and masks by window, the ring path wraps a
+    window-sized buffer — tokens must still agree once the sequence
+    outgrows the window."""
+    cfg = _fp32(get_config("gemma2-2b", smoke=True))  # window 16
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    prompts = _prompts(cfg, (14, 10), seed=9)
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=24, prefill_bucket=8,
+    ))
+    reqs = [server.submit(p, max_new_tokens=8) for p in prompts]
+    results = server.run()
+    for p, r in zip(prompts, reqs):
+        ref, _ = generate_static(
+            model, params, {"tokens": jnp.asarray([p], jnp.int32)},
+            max_new_tokens=8,
+        )
+        assert results[r.rid].out_tokens == list(ref[0])
+
+
+def test_slot_recycling_and_stats(served_model):
+    cfg, model, params = served_model
+    prompts = _prompts(cfg, (4, 6, 5, 7, 4), seed=3)
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=16, prefill_bucket=8,
+    ))
+    for p in prompts:
+        server.submit(p, max_new_tokens=4)
+    results = server.run()
+    assert len(results) == 5  # more requests than slots: slots recycled
+    assert all(r.finish_reason == FINISH_LENGTH for r in results.values())
+    s = server.stats
+    assert s.prefill_calls == 5
+    assert s.decode_tokens == sum(r.num_generated - 1 for r in results.values())
+    assert 0.0 < s.utilization <= 1.0
+    assert s.decode_steps * 2 == s.slot_steps
+
+
+def test_eos_finish_and_streaming(served_model):
+    cfg, model, params = served_model
+    (prompt,) = _prompts(cfg, (6,), seed=5)
+    cfgs = ServerConfig(num_slots=1, page_size=4, max_seq_len=16,
+                        prefill_bucket=8)
+    server = Server(model, params, cfgs)
+    req = server.submit(prompt, max_new_tokens=5)
+    first_tokens = server.run()[req.rid].out_tokens
+    # Resubmit with eos set to an observed token: generation must stop at
+    # its first occurrence, reason "eos".
+    eos = first_tokens[1]
+    server.reset()
+    req = server.submit(prompt, max_new_tokens=5, eos_id=eos)
+    events = list(server.stream())
+    assert [e.token for e in events] == first_tokens[: first_tokens.index(eos) + 1]
+    assert events[-1].finished and events[-1].finish_reason == FINISH_EOS
+    assert server.cache.allocator.num_held == 0
+
+
+def test_fp8_kv_pages_match_fp8_ring(served_model):
+    """E4M3 paged pools hit the same quantization as the E4M3 ring cache:
+    greedy tokens agree exactly; bf16-vs-fp8 logits stay within fp8 error."""
+    cfg, model, params = served_model
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="e4m3")
+    model8 = build(cfg8)
+    (prompt,) = _prompts(cfg, (9,), seed=7)
+    server = Server(model8, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=24, prefill_bucket=16,
+    ))
+    req = server.submit(prompt, max_new_tokens=6)
+    out = server.run()[req.rid].out_tokens
+    ref, _ = generate_static(
+        model8, params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        max_new_tokens=6,
+    )
+    assert out == list(ref[0])
+    # fp8 pools are half the bytes of the fp32 baseline's... compare dtypes.
+    kp = jax.tree.leaves(server.cache.pools)[0]
+    assert kp.dtype == jnp.float8_e4m3fn
+
+
+def test_fp8_vs_bf16_kv_logit_tolerance(served_model):
+    """Paged decode logits with E4M3 KV stay close to the fp32-KV ones."""
+    cfg, model, params = served_model
+    (prompt,) = _prompts(cfg, (8,), seed=11)
+
+    def paged_logits(kv_dtype):
+        m = build(dataclasses.replace(cfg, kv_cache_dtype=kv_dtype))
+        pools = m.init_paged_pools(8, 4)
+        toks = jnp.zeros((1, 8), jnp.int32).at[0].set(jnp.asarray(prompt))
+        page_row = jnp.asarray([1, 2, 3, 0], jnp.int32)  # page 3: decode room
+        logits, pools = m.prefill_paged(
+            params, toks, pools, page_row, jnp.int32(8), page_size=4)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        table = jnp.zeros((1, 4), jnp.int32).at[0].set(page_row)
+        lens = jnp.full((1,), 8, jnp.int32)
+        out = [logits]
+        for _ in range(3):
+            logits, pools = m.decode_paged(
+                params, tok, pools, table, lens, page_size=4)
+            out.append(logits)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            lens = lens + 1
+        return jnp.stack(out)
+
+    ref = paged_logits("fp32")
+    fp8 = paged_logits("e4m3")
+    # fp8 KV quantization moves logits a little; it must not blow them up.
+    np.testing.assert_allclose(np.asarray(fp8), np.asarray(ref), atol=0.75)
+    assert jnp.mean(jnp.abs(fp8 - ref)) < 0.08
+
+
+def test_server_rejects_unsupported_arch():
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    model = build(cfg)
+    with pytest.raises(NotImplementedError):
+        Server(model, params=None)
+    with pytest.raises(NotImplementedError):
+        model.init_paged_pools(4, 4)
+
+
+def test_warmup_then_reset_leaves_clean_state(served_model):
+    cfg, model, params = served_model
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=16, prefill_bucket=8,
+    ))
+    server.warmup([5, 9])
+    assert server.stats.decode_steps == 0 and not server.results
+    assert server.cache.allocator.num_held == 0
+    assert not server.scheduler.has_work()
+
+
+# -- sampling -----------------------------------------------------------------
+
+def test_sampling_greedy_and_filters():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((5, 64)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+
+    def draw(**kw):
+        p = SamplingParams(**kw)
+        return np.asarray(sample_logits(logits, key, **stack_params([p] * 5)))
+
+    assert (draw() == greedy).all()  # temperature 0 == greedy
+    assert (draw(temperature=1.0, top_k=1) == greedy).all()
+    assert (draw(temperature=1.0, top_p=1e-6) == greedy).all()
+    # top-k keeps draws inside the k most likely tokens across many keys.
+    k = 4
+    topk_sets = np.argsort(np.asarray(logits), axis=-1)[:, -k:]
+    sp = stack_params([SamplingParams(temperature=1.5, top_k=k)] * 5)
+    for s in range(50):
+        toks = np.asarray(sample_logits(logits, jax.random.PRNGKey(s), **sp))
+        for row in range(5):
+            assert toks[row] in topk_sets[row]
+
+
+def test_sampling_mixed_rows():
+    """Per-row parameters: greedy rows stay deterministic while sampled rows
+    use their own temperature."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((3, 32)).astype(np.float32))
+    sp = stack_params([
+        SamplingParams(),  # greedy
+        SamplingParams(temperature=2.0),
+        SamplingParams(temperature=0.5, top_k=8, top_p=0.9),
+    ])
+    greedy = int(jnp.argmax(logits[0]))
+    seen = set()
+    for s in range(20):
+        toks = np.asarray(sample_logits(logits, jax.random.PRNGKey(s), **sp))
+        assert toks[0] == greedy
+        seen.add(int(toks[1]))
+    assert len(seen) > 1, "temperature row should vary across keys"
