@@ -1,15 +1,21 @@
-"""Serving throughput: continuous batching (paged KV pool) vs static
-batching on a mixed-length synthetic workload.
+"""Serving throughput: continuous batching (StateStore: paged KV pools +
+per-slot recurrent state rows) vs static batching on mixed long/short
+synthetic workloads, per architecture family.
 
 Static batching pads every prompt in a batch and decodes until the batch's
 longest request finishes — short requests hold their lane idle. Continuous
 batching recycles a finished slot into the next queued request, so the
 decode GEMM stays fed (the utilization discipline the paper applies to its
-CE array via double-buffering, transplanted to serving).
+CE array via double-buffering, transplanted to serving). Long prompts
+prefill in fixed-size chunks interleaved with decode steps, bounding how
+long running requests stall (TTFT jitter) behind a long admission.
 
 Both paths report steady-state decode tok/s with compile excluded: the
 continuous server warms up every jitted shape first; the static path
-extrapolates its measured per-step cost over all steps.
+extrapolates its measured per-step cost over all steps. The continuous
+path additionally reports TTFT p50/p95 (submit -> first token, queueing
+included — the latency continuous batching + chunked prefill actually
+improve).
 
   PYTHONPATH=src:. python benchmarks/serving.py --smoke
 """
@@ -26,34 +32,49 @@ from repro.configs import get_config
 from repro.models import build
 from repro.serving import Server, ServerConfig, generate_static
 
-# Deterministic mixed-length workload: (prompt_len, max_new) cycles.
-_PROMPT_CYCLE = (6, 12, 9, 16)
-_GEN_CYCLE = (4, 16, 8, 12)
+# One benchmarked arch per serving family; hybrid exercises the recurrent
+# state rows + windowed page recycling, attention the pure paged-KV path.
+ARCHS = (
+    ("granite-3-8b", "attention"),
+    ("recurrentgemma-2b", "hybrid"),
+)
+
+# Mixed long/short workload: short interactive prompts interleaved with
+# long ones that the continuous path chunk-prefills. Generation lengths are
+# deliberately spread — static batching pays for the spread by idling every
+# short request's lane until the group's longest finishes.
+_SHORT_PROMPTS = (6, 9, 12, 8)
+_LONG_PROMPTS = (32,)
+_GEN_CYCLE = (4, 24, 6, 18)
+_PREFILL_CHUNK = 16
 
 
 def _workload(n_requests: int, vocab: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
-        plen = _PROMPT_CYCLE[i % len(_PROMPT_CYCLE)]
+        if i % 3 == 2:
+            plen = _LONG_PROMPTS[i % len(_LONG_PROMPTS)]
+        else:
+            plen = _SHORT_PROMPTS[i % len(_SHORT_PROMPTS)]
         gen = _GEN_CYCLE[i % len(_GEN_CYCLE)]
         reqs.append((list(rng.integers(0, vocab, size=plen)), gen))
     return reqs
 
 
-def bench_serving(rows: Rows, smoke: bool = True) -> dict:
+def _bench_arch(rows: Rows, arch: str, family: str, smoke: bool) -> dict:
     n_slots = 3 if smoke else 4
     n_requests = 6 if smoke else 16
-    cfg = get_config("granite-3-8b", smoke=True)
+    cfg = get_config(arch, smoke=True)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     workload = _workload(n_requests, cfg.vocab_size)
     max_seq = max(len(p) + g for p, g in workload)
 
-    # -- continuous batching over the paged pool ---------------------------
+    # -- continuous batching over the StateStore (chunked prefill) ---------
     server = Server(model, params, ServerConfig(
         num_slots=n_slots, page_size=8, max_seq_len=max_seq,
-        prefill_bucket=8,
+        prefill_bucket=8, prefill_chunk=_PREFILL_CHUNK,
     ))
     server.warmup([len(p) for p, _ in workload])
     for prompt, gen in workload:
@@ -62,6 +83,7 @@ def bench_serving(rows: Rows, smoke: bool = True) -> dict:
     s = server.stats
     cb_tok_s = s.decode_tok_s
     cb_util = s.utilization
+    ttft_p50, ttft_p95 = server.ttft_percentiles() or (0.0, 0.0)
 
     # -- static batching baseline (arrival-order groups, padded prompts) ---
     static_steps = 0
@@ -87,20 +109,33 @@ def bench_serving(rows: Rows, smoke: bool = True) -> dict:
     static_util = useful_decode / static_lane_steps if static_lane_steps else 0.0
 
     speedup = cb_tok_s / static_tok_s if static_tok_s else 0.0
-    rows.add("serving/continuous/decode_tok_s", None, f"{cb_tok_s:.1f}",
-             tok_s=cb_tok_s, decode_steps=s.decode_steps)
-    rows.add("serving/continuous/utilization", None, f"{cb_util:.3f}",
-             utilization=cb_util)
-    rows.add("serving/static/decode_tok_s", None, f"{static_tok_s:.1f}",
-             tok_s=static_tok_s, decode_steps=static_steps)
-    rows.add("serving/static/utilization", None, f"{static_util:.3f}",
-             utilization=static_util)
-    rows.add("serving/continuous_vs_static_speedup", None, f"{speedup:.2f}",
-             speedup=speedup)
+    pre = f"serving/{family}"
+    rows.add(f"{pre}/continuous/decode_tok_s", None, f"{cb_tok_s:.1f}",
+             tok_s=cb_tok_s, decode_steps=s.decode_steps, arch=arch,
+             arch_family=family)
+    rows.add(f"{pre}/continuous/utilization", None, f"{cb_util:.3f}",
+             utilization=cb_util, arch=arch, arch_family=family)
+    rows.add(f"{pre}/continuous/ttft_ms", None,
+             f"p50 {ttft_p50 * 1e3:.1f} / p95 {ttft_p95 * 1e3:.1f}",
+             ttft_p50_ms=ttft_p50 * 1e3, ttft_p95_ms=ttft_p95 * 1e3,
+             prefill_chunk=_PREFILL_CHUNK, arch=arch, arch_family=family)
+    rows.add(f"{pre}/static/decode_tok_s", None, f"{static_tok_s:.1f}",
+             tok_s=static_tok_s, decode_steps=static_steps, arch=arch,
+             arch_family=family)
+    rows.add(f"{pre}/static/utilization", None, f"{static_util:.3f}",
+             utilization=static_util, arch=arch, arch_family=family)
+    rows.add(f"{pre}/continuous_vs_static_speedup", None, f"{speedup:.2f}",
+             speedup=speedup, arch=arch, arch_family=family)
     return {
+        "arch": arch, "family": family,
         "cb_tok_s": cb_tok_s, "static_tok_s": static_tok_s,
         "cb_util": cb_util, "static_util": static_util, "speedup": speedup,
+        "ttft_p50_ms": ttft_p50 * 1e3, "ttft_p95_ms": ttft_p95 * 1e3,
     }
+
+
+def bench_serving(rows: Rows, smoke: bool = True) -> list[dict]:
+    return [_bench_arch(rows, arch, family, smoke) for arch, family in ARCHS]
 
 
 def main(argv=None):
@@ -108,13 +143,17 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args(argv)
     rows = Rows()
-    res = bench_serving(rows, smoke=args.smoke)
+    results = bench_serving(rows, smoke=args.smoke)
     print("name,us_per_call,derived")
     rows.emit()
-    verdict = "confirmed" if res["speedup"] >= 1.0 else "NOT met (timing noise?)"
-    print(f"# continuous >= static: {verdict} "
-          f"({res['cb_tok_s']:.1f} vs {res['static_tok_s']:.1f} tok/s, "
-          f"utilization {res['cb_util']:.0%} vs {res['static_util']:.0%})")
+    for res in results:
+        verdict = ("confirmed" if res["speedup"] >= 1.0
+                   else "NOT met (timing noise?)")
+        print(f"# [{res['family']}] continuous >= static: {verdict} "
+              f"({res['cb_tok_s']:.1f} vs {res['static_tok_s']:.1f} tok/s, "
+              f"utilization {res['cb_util']:.0%} vs {res['static_util']:.0%}, "
+              f"ttft p50 {res['ttft_p50_ms']:.1f} ms / "
+              f"p95 {res['ttft_p95_ms']:.1f} ms)")
 
 
 if __name__ == "__main__":

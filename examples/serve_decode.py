@@ -1,8 +1,11 @@
 """Continuous-batching serving demo: mixed-length requests stream through
-the paged KV-cache pool (``repro.serving``), each with its own sampling
-settings, while the decode batch stays one fixed jitted shape.
+the serving StateStore (``repro.serving``) — paged KV pools for attention
+layers, per-slot state rows for recurrent layers — each with its own
+sampling settings, while the decode batch stays one fixed jitted shape.
 
   PYTHONPATH=src python examples/serve_decode.py --arch granite-3-8b
+  PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b \\
+      --chunked-prefill 8                        # hybrid, chunked prompts
   PYTHONPATH=src python examples/serve_decode.py --fp8-kv   # E4M3 KV pages
 """
 import argparse
@@ -25,6 +28,8 @@ def main():
     ap.add_argument("--num-slots", type=int, default=2)
     ap.add_argument("--fp8-kv", action="store_true",
                     help="store the KV pages in E4M3 (paper fp8 storage)")
+    ap.add_argument("--chunked-prefill", type=int, default=0, metavar="N",
+                    help="N-token prefill chunks interleaved with decode")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -34,9 +39,9 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(1)
 
-    if not model.supports_paged():
-        # Recurrent / enc-dec / VLM families serve on the static-batch path.
-        print(f"{cfg.name}: no paged-attention path; static-batch decode")
+    if not model.supports_cb():
+        # Only enc-dec / VLM still serve on the static-batch path.
+        print(f"{cfg.name}: not decoder-only; static-batch decode")
         batch = make_batch(cfg, args.requests, args.prompt_len,
                            jax.random.PRNGKey(1))
         seqs, stats = generate_static(model, params, batch,
@@ -49,10 +54,12 @@ def main():
     server = Server(model, params, ServerConfig(
         num_slots=args.num_slots, page_size=8,
         max_seq_len=args.prompt_len + args.gen, prefill_bucket=8,
+        prefill_chunk=args.chunked_prefill or None,
     ))
     print(f"arch={cfg.name} kv_dtype={cfg.kv_cache_dtype} "
-          f"pool={server.cache.kv_bytes() / 1e6:.2f} MB "
-          f"({server.cache.allocator.num_pages} pages x 8 tokens)")
+          f"kv pool={server.cache.kv_bytes() / 1e6:.2f} MB "
+          f"({server.cache.allocator.num_pages} pages x 8 tokens), "
+          f"state rows={server.cache.state_bytes() / 1e6:.2f} MB")
 
     # Mixed lengths, mixed sampling: even requests greedy, odd ones sampled.
     lens = [max(2, args.prompt_len - 3 * (i % 3)) for i in range(args.requests)]

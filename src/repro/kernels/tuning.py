@@ -47,6 +47,17 @@ _SKINNY_HEURISTIC = {
     2: (512, 128),
     4: (512, 128),
 }
+# Chunked-prefill GEMMs sit between decode and training: M = chunk size
+# (16/32/64 tokens). The M tile rounds the chunk up to the sublane grid
+# (never a full 128 training tile) and, like the skinny table, spends the
+# spare VMEM on a deeper K tile.
+_CHUNK_M = 64
+# (bk, bn) per storage byte-width for the chunk-M prefill table.
+_CHUNK_HEURISTIC = {
+    1: (512, 128),
+    2: (256, 128),
+    4: (256, 128),
+}
 # VMEM budget for one grid step's working set (x, w, y/out, acc tiles).
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -66,6 +77,11 @@ AUTOTUNE_CANDIDATES = (
     (2, 128, 512),
     (4, 128, 512),
     (8, 128, 256),
+    # Chunk-sized prefill rows (M = prefill chunk, 16/32/64); clamping
+    # dedupes these for training-size problems just like the skinny set.
+    (16, 128, 512),
+    (32, 128, 256),
+    (64, 128, 256),
 )
 
 
@@ -126,11 +142,16 @@ def heuristic_block_sizes(
             bk //= 2
         _, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
         return bm, _ceil_to(bn, LANE), _ceil_to(bk, sub)
+    if m <= _CHUNK_M:
+        # Chunk-prefill table: M tile = the chunk rounded to the sublane
+        # grid, K tile deepened into the VMEM a 128-row tile would waste.
+        bk, bn = _CHUNK_HEURISTIC.get(itemsize, (256, 128))
+        bm = _ceil_to(m, sub)
+        while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
+            bk //= 2
+        bm, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+        return bm, _ceil_to(bn, LANE), _ceil_to(bk, sub)
     bm, bn, bk = _HEURISTIC.get(itemsize, (128, 128, 128))
-    # Tall-skinny / short-wide adjustments: spend the VMEM budget on the
-    # dimension that actually exists (paper Fig. 11: M=1 depthwise rows).
-    if m <= 32 <= k:
-        bk = max(bk, 256 // itemsize)
     while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
         bk //= 2
     bm, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)

@@ -1,12 +1,16 @@
 """Serving launcher on the ``repro.serving`` subsystem.
 
-Default mode is continuous batching over the paged KV pool; ``--mode
-static`` runs the ring-buffer static-batch path for comparison. Both report
-steady-state tok/s (compile excluded — the continuous path warms up every
-jitted shape first, the static path times its first decode separately).
+Default mode is continuous batching over the serving StateStore (paged KV
+pools + per-slot recurrent state rows — every decoder-only family,
+including recurrent/hybrid); ``--mode static`` runs the ring-buffer
+static-batch path for comparison, and is the automatic fallback only for
+enc-dec/VLM. Both report steady-state tok/s (compile excluded — the
+continuous path warms up every jitted shape first, the static path times
+its first decode separately).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke --fp8-kv
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b --smoke \\
+      --chunked-prefill 16
 """
 from __future__ import annotations
 
@@ -40,6 +44,9 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--fp8-kv", action="store_true",
                     help="store the KV pages in E4M3 (paper fp8 storage)")
+    ap.add_argument("--chunked-prefill", type=int, default=0, metavar="N",
+                    help="split prompts into N-token chunks interleaved "
+                         "with decode steps (0 = whole-prompt prefill)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -63,9 +70,9 @@ def main(argv=None):
     sampling = SamplingParams(args.temperature, args.top_k, args.top_p)
 
     mode = args.mode
-    if mode == "continuous" and not model.supports_paged():
-        print(f"note: {cfg.name} ({cfg.family}/{cfg.block_pattern}) has no "
-              "paged-attention path; falling back to static-batch serving")
+    if mode == "continuous" and not model.supports_cb():
+        print(f"note: {cfg.name} ({cfg.family}) is not decoder-only; "
+              "falling back to static-batch serving")
         mode = "static"
 
     if mode == "static":
@@ -93,11 +100,15 @@ def main(argv=None):
             num_slots=args.num_slots, page_size=args.page_size,
             max_seq_len=max_seq,
             prefill_bucket=min(32, max(8, args.prompt_len)),
+            prefill_chunk=args.chunked_prefill or None,
         ),
         engine=eng, seed=args.seed,
     )
-    print(f"kv pool: {server.cache.allocator.num_pages} pages x "
-          f"{args.page_size} tokens, {server.cache.kv_bytes() / 1e6:.2f} MB")
+    prof = server.profile
+    print(f"state store: {server.cache.allocator.num_pages} pages x "
+          f"{args.page_size} tokens ({server.cache.kv_bytes() / 1e6:.2f} MB kv, "
+          f"{server.cache.state_bytes() / 1e6:.2f} MB recurrent rows; "
+          f"kv_window={prof.kv_window})")
     server.warmup(lens)
     for ln in lens:
         server.submit(
@@ -107,9 +118,14 @@ def main(argv=None):
     results = server.run()
     s = server.stats
     print(f"continuous: {len(results)} requests, {s.decode_tokens} decode "
-          f"tokens in {s.decode_steps} steps over {args.num_slots} slots")
+          f"tokens in {s.decode_steps} steps over {args.num_slots} slots"
+          + (f", prefill chunk {args.chunked_prefill}"
+             if args.chunked_prefill else ""))
     print(f"steady-state decode: {s.decode_tok_s:.1f} tok/s, "
           f"engine utilization {s.utilization:.0%}")
+    ttft = server.ttft_percentiles()
+    if ttft is not None:
+        print(f"ttft: p50 {ttft[0] * 1e3:.1f} ms, p95 {ttft[1] * 1e3:.1f} ms")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}: prompt {r.prompt_len:>3} -> "

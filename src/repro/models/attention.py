@@ -39,7 +39,7 @@ POS_SENTINEL = jnp.iinfo(jnp.int32).max // 2  # marks unwritten cache slots
 
 
 class PagedInfo(NamedTuple):
-    """Slot mappings for one step over the paged KV pool (repro.serving).
+    """Slot mappings for one step over the serving StateStore (repro.serving).
 
     The indices are layer-invariant (every layer shares the page table), so
     the serving step computes them once and the stack threads them through as
@@ -49,15 +49,33 @@ class PagedInfo(NamedTuple):
         fresh key/value; pad rows and inactive slots point into the null
         page (page 0), which is never read back as valid.
     read_idx: (B, L) flat pool indices covering each slot's page table in
-        position order (decode), or None to attend over the fresh k/v
-        (single-shot prefill).
-    k_pos: key positions matching read_idx — (B, L) with POS_SENTINEL at
-        invalid entries; when read_idx is None, (B, Sq) over the fresh keys.
+        position order, or None to attend over the fresh k/v only
+        (single-shot prefill). With Sq > 1 AND read_idx set (chunked
+        prefill), the layer attends over [gathered pool tokens | fresh k/v].
+    k_pos: key positions with POS_SENTINEL at invalid entries, matching the
+        attended keys: (B, Sq) when read_idx is None, (B, L) for decode,
+        (B, L + Sq) for chunked prefill.
+    slots: (B,) state row per batch row — recurrent layers read/write their
+        per-slot state pools through it (prefill gathers one row; decode
+        covers all rows in order).
+    starts: (B,) first absolute position of this chunk; start == 0 selects
+        the fresh init state over the (stale, recycled) stored row.
+    lengths: (B,) valid token count of each right-padded prefill row.
+    active: (B,) decode commit mask — inactive rows (free slots, slots mid
+        chunked-prefill) keep their recurrent state untouched.
+    chunked: trace-time constant marking a chunked-prefill step (read_idx
+        set AND fresh k/v appended) — distinguishes it from decode, which
+        also sets read_idx but attends over the gathered keys only.
     """
 
     write_idx: jnp.ndarray
     read_idx: jnp.ndarray | None
     k_pos: jnp.ndarray
+    slots: jnp.ndarray | None = None
+    starts: jnp.ndarray | None = None
+    lengths: jnp.ndarray | None = None
+    active: jnp.ndarray | None = None
+    chunked: bool = False
 
 
 class AttnConfig(NamedTuple):
@@ -251,7 +269,19 @@ def apply(
             v.reshape(b * s, hkv, hd).astype(cache["vp"].dtype)
         )
         new_cache = {"kp": ck, "vp": cv}
-        if paged.read_idx is not None:
+        if paged.read_idx is not None and paged.chunked:
+            # Chunked prefill: attend over [earlier chunks' tokens gathered
+            # through the page table | this chunk's fresh k/v]. paged.k_pos
+            # already covers the concatenation (gathered entries at
+            # positions >= chunk start are sentinel-masked, so the fresh
+            # keys are never double-counted).
+            k = jnp.concatenate(
+                [ck[paged.read_idx].astype(engine.policy.compute), k], axis=1
+            )
+            v = jnp.concatenate(
+                [cv[paged.read_idx].astype(engine.policy.compute), v], axis=1
+            )
+        elif paged.read_idx is not None:
             # Decode: gather every slot's pages in position order.
             k = ck[paged.read_idx].astype(engine.policy.compute)
             v = cv[paged.read_idx].astype(engine.policy.compute)

@@ -68,16 +68,36 @@ def _gates(params, xr, engine):
     return a, b
 
 
-def apply_scan(params, x, cfg: RGLRUConfig, engine: Engine):
+def apply_scan(params, x, cfg: RGLRUConfig, engine: Engine, *,
+               state=None, lengths=None):
     """Training/prefill path: parallel associative scan over time.
 
     Returns (y, final_state) so prefill reuses the training path.
+
+    state: optional carried state ({"h", "conv"}) — the scan continues the
+    recurrence from it (chunked prefill over a stored per-slot state row).
+    lengths: optional (B,) valid-token counts for right-padded rows (masked
+    prefill): pad positions become scan identities (a=1, b=0), so the final
+    ``h`` equals the state at each row's last valid position, and the conv
+    state is gathered at the valid boundary rather than the padded tail.
     """
     engine = as_engine(engine)
+    b_sz, s, _ = x.shape
     gate = common.gelu(common.dense_apply(params["in_gate"], x, engine))
     xr_raw = common.dense_apply(params["in_x"], x, engine)
-    xr, conv_state = _causal_conv(xr_raw, params["conv_w"])
+    valid = None
+    if lengths is not None:
+        valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+        xr_raw = jnp.where(valid[..., None], xr_raw, 0.0)
+    conv_in = None if state is None else state["conv"]
+    xr, conv_state = _causal_conv(xr_raw, params["conv_w"], conv_in)
     a, b = _gates(params, xr, engine)
+    if state is not None:
+        # Fold the carried h into the first step: h_1 = a_1 h_0 + b_1.
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
 
     def combine(c1, c2):
         a1, b1 = c1
@@ -87,8 +107,20 @@ def apply_scan(params, x, cfg: RGLRUConfig, engine: Engine):
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = (h.astype(x.dtype)) * gate
     out = common.dense_apply(params["out"], y, engine)
-    state = {"h": h[:, -1], "conv": conv_state.astype(jnp.bfloat16)}
-    return out, state
+    if valid is not None:
+        # Conv state at each row's valid boundary: the last _CONV_W - 1
+        # inputs of [carried conv | valid xr], i.e. ext[lv : lv + W - 1].
+        carried = (jnp.zeros((b_sz, _CONV_W - 1, cfg.d_rnn), xr_raw.dtype)
+                   if state is None else state["conv"].astype(xr_raw.dtype))
+        ext = jnp.concatenate([carried, xr_raw], axis=1)  # (B, W-1+S, R)
+        idx = lengths[:, None] + jnp.arange(_CONV_W - 1, dtype=jnp.int32)[None]
+        conv_state = jnp.take_along_axis(ext, idx[..., None], axis=1)
+    # With identity pads, h[:, -1] is the state at the last valid position.
+    # Conv state stays fp32 like h: a chunked prefill round-trips it through
+    # the StateStore at every chunk boundary, where a low-precision store
+    # would accumulate error the single-scan static path never sees.
+    state_out = {"h": h[:, -1], "conv": conv_state.astype(jnp.float32)}
+    return out, state_out
 
 
 def apply_decode(params, x, state, cfg: RGLRUConfig, engine: Engine):
@@ -107,5 +139,5 @@ def apply_decode(params, x, state, cfg: RGLRUConfig, engine: Engine):
 def init_state(batch: int, cfg: RGLRUConfig):
     return {
         "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
-        "conv": jnp.zeros((batch, _CONV_W - 1, cfg.d_rnn), jnp.bfloat16),
+        "conv": jnp.zeros((batch, _CONV_W - 1, cfg.d_rnn), jnp.float32),
     }

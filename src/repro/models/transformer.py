@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,25 @@ from repro.models import attention, common, ffn, moe, rglru, xlstm
 from repro.models.attention import AttnConfig
 
 Params = dict[str, Any]
+
+
+class CBProfile(NamedTuple):
+    """What the continuous-batching StateStore must provision for a model.
+
+    needs_kv_pages: any attention layer present — KV pages get reserved per
+        request; attention-free (pure-recurrent) archs reserve zero pages.
+    kv_window: set when EVERY attention layer is sliding-window — pages
+        whose positions fall out of the window can be recycled mid-request
+        and admission reserves only a window's worth of pages.
+    """
+
+    needs_kv_pages: bool
+    kv_window: int | None
+
+
+def _row_mask(mask, leaf):
+    """Broadcast a (B,) mask over a (B, ...) state leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,25 +232,9 @@ class Transformer:
             )
             if new_cache is not None:
                 new_cache["attn"] = ac
-        elif kind == "mlstm":
-            if decode:
-                h, st = xlstm.mlstm_decode(p["cell"], h, cache["state"], self.xl_cfg, engine)
-            else:
-                h, st = xlstm.mlstm_apply(p["cell"], h, self.xl_cfg, engine)
-            if new_cache is not None:
-                new_cache["state"] = st
-        elif kind == "slstm":
-            if decode:
-                h, st = xlstm.slstm_decode(p["cell"], h, cache["state"], self.xl_cfg, engine)
-            else:
-                h, st = xlstm.slstm_apply(p["cell"], h, self.xl_cfg, engine)
-            if new_cache is not None:
-                new_cache["state"] = st
-        elif kind == "rglru":
-            if decode:
-                h, st = rglru.apply_decode(p["cell"], h, cache["state"], self.rg_cfg, engine)
-            else:
-                h, st = rglru.apply_scan(p["cell"], h, self.rg_cfg, engine)
+        elif kind in ("mlstm", "slstm", "rglru"):
+            h, st = self._recurrent_block(kind, p, h, cache, engine,
+                                          decode=decode, paged=paged)
             if new_cache is not None:
                 new_cache["state"] = st
         x = x + h
@@ -275,6 +278,55 @@ class Transformer:
                 h2 = ffn.apply(p["ffn"], h2, cfg.act, engine)
             x = x + h2
         return x, new_cache, aux
+
+    def _recurrent_cell_fns(self, kind):
+        if kind == "mlstm":
+            return xlstm.mlstm_apply, xlstm.mlstm_decode, xlstm.mlstm_init_state, self.xl_cfg
+        if kind == "slstm":
+            return xlstm.slstm_apply, xlstm.slstm_decode, xlstm.slstm_init_state, self.xl_cfg
+        return rglru.apply_scan, rglru.apply_decode, rglru.init_state, self.rg_cfg
+
+    def _recurrent_block(self, kind, p, h, cache, engine, *, decode, paged):
+        """One recurrent cell under every execution mode.
+
+        Static (paged None): training forward / whole-prompt prefill /
+        batch-shared decode, state carried per batch row. Slot-aware
+        (paged set): the cache entry is the (n_slots, ...) state pool —
+        prefill gathers each row's state (fresh init when the chunk starts
+        at position 0, i.e. a recycled slot resets by construction), runs a
+        masked scan over the right-padded chunk, and commits rows back;
+        decode covers all slots in order, committing only active rows.
+        """
+        apply_fn, decode_fn, init_fn, ccfg = self._recurrent_cell_fns(kind)
+        if decode:
+            st_in = cache["state"]
+            h, st = decode_fn(p["cell"], h, st_in, ccfg, engine)
+            if paged is not None and paged.active is not None:
+                st = jax.tree.map(
+                    lambda new, old: jnp.where(_row_mask(paged.active, new), new, old),
+                    st, st_in,
+                )
+            return h, st
+        if paged is not None and cache is not None:
+            rows = jax.tree.map(lambda v: v[paged.slots], cache["state"])
+            init = init_fn(h.shape[0], ccfg)
+            fresh = paged.starts == 0
+            st_in = jax.tree.map(
+                lambda i, r: jnp.where(_row_mask(fresh, r), i.astype(r.dtype), r),
+                init, rows,
+            )
+            h, st = apply_fn(p["cell"], h, ccfg, engine,
+                             state=st_in, lengths=paged.lengths)
+            st = jax.tree.map(
+                lambda pool, new: pool.at[paged.slots].set(
+                    jnp.where(_row_mask(paged.active, new),
+                              new.astype(pool.dtype), pool[paged.slots])
+                ),
+                cache["state"], st,
+            )
+            return h, st
+        h, st = apply_fn(p["cell"], h, ccfg, engine)
+        return h, st
 
     def _run_stack(
         self, stack, x, positions, engine, *, cache=None, enc_out=None,
@@ -455,34 +507,51 @@ class Transformer:
         return {"pos": jnp.zeros((), jnp.int32), "units": units, "rem": rem,
                 "enc_pos": jnp.arange(max(cross_len, 1), dtype=jnp.int32)}
 
-    # -- paged serving (repro.serving continuous batching) ---------------------
-    def supports_paged(self) -> bool:
-        """The paged-pool serving path covers pure-attention decoders (dense
-        or MoE FFN). Recurrent kinds keep per-sequence states (nothing to
-        page) and right-padded prefill would corrupt them; enc-dec/VLM need
-        modality prefixes. Those families stay on the static-batch path."""
+    # -- slot-aware serving (repro.serving continuous batching) -----------------
+    def supports_cb(self) -> bool:
+        """Continuous batching covers every decoder-only family: attention
+        layers page K/V through the token pool, recurrent layers (rglru,
+        m/sLSTM) keep per-slot state rows with masked prefill commits.
+        Enc-dec and VLM need modality prefixes and stay static-batch."""
         return (
             not self.cfg.is_encoder_decoder
             and self.cfg.family not in ("vlm", "audio")
-            and all(k in ("attn", "attn_local") for k in self.pattern)
         )
 
-    def init_paged_pools(self, num_pages: int, page_size: int):
-        """Per-layer flat KV token pools of num_pages * page_size slots
-        (page 0 is the serving layer's null page). Same {units, rem} layout
-        as ``init_cache`` so ``_run_stack`` threads them unchanged."""
-        if not self.supports_paged():
+    def cb_profile(self) -> CBProfile:
+        """Pool-layout profile the serving layer sizes its StateStore and
+        page reservations from (see ``CBProfile``)."""
+        attn_kinds = [k for k in self.pattern if k in ("attn", "attn_local")]
+        window = None
+        if (
+            attn_kinds
+            and all(k == "attn_local" for k in attn_kinds)
+            and self.cfg.sliding_window
+        ):
+            window = self.cfg.sliding_window
+        return CBProfile(needs_kv_pages=bool(attn_kinds), kv_window=window)
+
+    def init_state_store(self, num_slots: int, num_pages: int, page_size: int):
+        """Per-layer serving state: attention layers get flat KV token pools
+        of num_pages * page_size slots (page 0 is the serving layer's null
+        page); recurrent layers get per-slot state rows, one (num_slots, ...)
+        array per state leaf. Same {units, rem} layout as ``init_cache`` so
+        ``_run_stack`` threads them unchanged."""
+        if not self.supports_cb():
             raise NotImplementedError(
-                f"{self.cfg.name}: paged serving needs a pure-attention "
-                f"decoder (pattern={self.pattern}, family={self.cfg.family}); "
-                "use the static-batch path (make_serve_steps)"
+                f"{self.cfg.name}: continuous batching covers decoder-only "
+                f"families (family={self.cfg.family}); use the static-batch "
+                "path (make_serve_steps)"
             )
         n_tok = num_pages * page_size
 
         def block_pool(kind):
-            return {"attn": attention.init_paged_pool(
-                n_tok, self.attn_cfg(kind), self.kv_dtype
-            )}
+            if kind in ("attn", "attn_local"):
+                return {"attn": attention.init_paged_pool(
+                    n_tok, self.attn_cfg(kind), self.kv_dtype
+                )}
+            _, _, init_fn, ccfg = self._recurrent_cell_fns(kind)
+            return {"state": init_fn(num_slots, ccfg)}
 
         def unit_pool(_):
             return {
@@ -497,27 +566,53 @@ class Transformer:
         }
         return {"units": units, "rem": rem}
 
-    def prefill_paged(self, params, tokens, pools, page_row, length, *,
-                      page_size: int, engine: Engine | None = None):
-        """Single-request prefill into the paged pool.
+    def prefill_cb(self, params, tokens, pools, page_row, slot, start, length,
+                   *, page_size: int, chunked: bool = False,
+                   engine: Engine | None = None):
+        """One prefill chunk for one slot of the StateStore.
 
-        tokens: (1, Tb) right-padded prompt; page_row: (P,) this slot's page
-        ids; length: () valid prompt length. Pad rows compute garbage that
-        never escapes: their keys are masked (POS_SENTINEL) and their K/V
-        writes land in the null page. Returns (logits (1, V) at position
-        length-1, new pools).
+        tokens: (1, Tb) right-padded chunk; page_row: (P,) the slot's page
+        ids; slot: () state row to read/commit; start: () absolute position
+        of the chunk's first token (start == 0 resets recurrent state rows —
+        that is how a recycled slot forgets its previous request); length:
+        () valid tokens in this chunk. With ``chunked`` (a trace-time
+        constant), attention also gathers the earlier chunks' K/V back
+        through the page table; recurrent layers continue from the stored
+        state row either way. Pad rows compute garbage that never escapes:
+        their keys are masked (POS_SENTINEL), their K/V writes land in the
+        null page, and masked scans skip their state updates. Returns
+        (logits (1, V) at the chunk's last valid position, new pools).
         """
         eng = as_engine(engine) if engine is not None else self.engine
         b, s = tokens.shape
         tok = jnp.arange(s, dtype=jnp.int32)
+        pos = start + tok
         valid = tok < length
+        page_idx = jnp.clip(pos // page_size, 0, page_row.shape[0] - 1)
         write_idx = jnp.where(
-            valid, page_row[tok // page_size] * page_size + tok % page_size, 0
+            valid, page_row[page_idx] * page_size + pos % page_size, 0
         )
-        k_pos = jnp.where(valid, tok, attention.POS_SENTINEL)[None]
-        paged = attention.PagedInfo(write_idx=write_idx, read_idx=None, k_pos=k_pos)
+        fresh_pos = jnp.where(valid, pos, attention.POS_SENTINEL)[None]
+        if chunked:
+            n_tok = page_row.shape[0] * page_size
+            read_idx = (
+                page_row[:, None] * page_size
+                + jnp.arange(page_size, dtype=jnp.int32)[None, :]
+            ).reshape(1, n_tok)
+            lpos = jnp.arange(n_tok, dtype=jnp.int32)[None]
+            read_pos = jnp.where(lpos < start, lpos, attention.POS_SENTINEL)
+            k_pos = jnp.concatenate([read_pos, fresh_pos], axis=1)
+        else:
+            read_idx = None
+            k_pos = fresh_pos
+        paged = attention.PagedInfo(
+            write_idx=write_idx, read_idx=read_idx, k_pos=k_pos,
+            slots=jnp.atleast_1d(slot), starts=jnp.atleast_1d(start),
+            lengths=jnp.atleast_1d(length), active=jnp.ones((b,), bool),
+            chunked=chunked,
+        )
         x = self.embed(params, tokens, engine=eng)
-        positions = jnp.broadcast_to(tok[None], (b, s))
+        positions = jnp.broadcast_to(pos[None], (b, s))
         x, new_pools, _ = self._run_stack(
             params["decoder"], x, positions, eng, cache=pools, paged=paged
         )
@@ -526,24 +621,25 @@ class Transformer:
         logits = self.logits(params, x_last, engine=eng)
         return logits[:, 0], new_pools
 
-    def decode_paged(self, params, tokens, pools, page_table, seq_lens, *,
-                     page_size: int, engine: Engine | None = None):
-        """Slot-batched one-token decode over the paged pool.
+    def decode_cb(self, params, tokens, pools, page_table, seq_lens, active,
+                  *, page_size: int, engine: Engine | None = None):
+        """Slot-batched one-token decode over the StateStore.
 
         tokens: (S, 1) last sampled token per slot; page_table: (S, P) page
         ids in position order; seq_lens: (S,) tokens already cached per slot
-        (= the new token's position). Inactive slots (zeroed page-table row,
-        seq_len 0) write to the null page and produce discarded logits, so
-        the step stays one fixed shape regardless of which slots are live.
-        Returns (logits (S, V), new pools).
-        """
+        (= the new token's position); active: (S,) which slots are decoding.
+        Inactive rows — free slots AND slots mid chunked-prefill — write
+        K/V to the null page, keep their recurrent state rows untouched,
+        and produce discarded logits, so the step stays one fixed shape
+        regardless of which slots are live. Returns (logits (S, V), new
+        pools)."""
         eng = as_engine(engine) if engine is not None else self.engine
         n_slots = tokens.shape[0]
         positions = seq_lens[:, None]  # (S, 1): per-slot decode position
         cur_page = jnp.take_along_axis(
             page_table, (seq_lens // page_size)[:, None], axis=1
         )[:, 0]
-        write_idx = cur_page * page_size + seq_lens % page_size
+        write_idx = jnp.where(active, cur_page * page_size + seq_lens % page_size, 0)
         n_tok = page_table.shape[1] * page_size
         read_idx = (
             page_table[:, :, None] * page_size
@@ -551,7 +647,11 @@ class Transformer:
         ).reshape(n_slots, n_tok)
         lpos = jnp.arange(n_tok, dtype=jnp.int32)[None]
         k_pos = jnp.where(lpos <= seq_lens[:, None], lpos, attention.POS_SENTINEL)
-        paged = attention.PagedInfo(write_idx=write_idx, read_idx=read_idx, k_pos=k_pos)
+        paged = attention.PagedInfo(
+            write_idx=write_idx, read_idx=read_idx, k_pos=k_pos,
+            slots=jnp.arange(n_slots, dtype=jnp.int32), starts=seq_lens,
+            active=active,
+        )
         x = self.embed(params, tokens, engine=eng)
         x, new_pools, _ = self._run_stack(
             params["decoder"], x, positions, eng, cache=pools, decode=True,

@@ -63,16 +63,31 @@ def _mlstm_heads(params, x, cfg: XLSTMConfig, engine):
     return q, k, v, log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1)
 
 
-def mlstm_apply(params, x, cfg: XLSTMConfig, engine: Engine):
+_LOG_ZERO = -1e30  # finite stand-in for log 0 (inf would NaN under inf-inf)
+
+
+def mlstm_apply(params, x, cfg: XLSTMConfig, engine: Engine, *,
+                state=None, lengths=None):
     """Chunkwise-parallel mLSTM forward. x: (B, S, D).
 
     Returns (y, final_state) — the final state is the decode cache, so
     prefill falls out of the training path for free.
+
+    state: optional carried {"C", "n", "m"} — the chunk scan starts from it
+    instead of the zero state (chunked prefill continuation).
+    lengths: optional (B,) valid counts for right-padded rows; pad positions
+    get log_i = -inf (no input) and log_f = 0 (carry), so the committed
+    state is exactly the state after each row's last valid token.
     """
     engine = as_engine(engine)
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
     q, k, v, log_i, log_f = _mlstm_heads(params, x, cfg, engine)
+    if lengths is not None:
+        valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+                 < lengths[:, None])[:, None, :]  # (B, 1, S)
+        log_i = jnp.where(valid, log_i, _LOG_ZERO)
+        log_f = jnp.where(valid, log_f, 0.0)
 
     c = min(_CHUNK, s)
     assert s % c == 0, (s, c)
@@ -123,9 +138,12 @@ def mlstm_apply(params, x, cfg: XLSTMConfig, engine: Engine):
         n_out = n_in * w_c[..., None] + jnp.sum(w_s[..., None] * ki.astype(jnp.float32), axis=2)
         return (C_out, n_out, m_out), h_t
 
-    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
-    n0 = jnp.zeros((b, h, hd), jnp.float32)
-    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    if state is None:
+        C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), _LOG_ZERO, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
     (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
     # hs: (N, B, H, c, hd) -> (B, S, D)
     hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
@@ -206,23 +224,41 @@ def _slstm_cell(wx_t, r, h_prev, c_prev, n_prev, m_prev, nheads, hd):
     return h_new, c, n, m_new
 
 
-def slstm_apply(params, x, cfg: XLSTMConfig, engine: Engine):
-    """Sequential sLSTM forward. Returns (y, final_state)."""
+def slstm_apply(params, x, cfg: XLSTMConfig, engine: Engine, *,
+                state=None, lengths=None):
+    """Sequential sLSTM forward. Returns (y, final_state).
+
+    state: optional carried {"h", "c", "n", "m"} the scan continues from.
+    lengths: optional (B,) valid counts for right-padded rows — pad steps
+    leave the carry untouched, so the final state is each row's state after
+    its last valid token (masked prefill).
+    """
     engine = as_engine(engine)
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
     wx = common.dense_apply(params["wx"], x, engine)  # (B,S,4D)
+    valid = (jnp.ones((s, b), bool) if lengths is None else
+             (jnp.arange(s, dtype=jnp.int32)[:, None] < lengths[None, :]))
 
-    def step(carry, wx_t):
+    def step(carry, xs):
+        wx_t, valid_t = xs
         h_prev, c_prev, n_prev, m_prev = carry
         h_new, c, n, m = _slstm_cell(wx_t, params["r"], h_prev, c_prev, n_prev,
                                      m_prev, h, hd)
-        return (h_new, c, n, m), h_new
+        keep = valid_t[:, None, None]  # (B, 1, 1) vs (B, H, hd) leaves
+        carry_new = (
+            jnp.where(keep, h_new, h_prev), jnp.where(keep, c, c_prev),
+            jnp.where(keep, n, n_prev), jnp.where(keep, m, m_prev),
+        )
+        return carry_new, h_new
 
-    zeros = jnp.zeros((b, h, hd), jnp.float32)
-    m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
-    (hf, cf, nf, mf), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0),
-                                        wx.transpose(1, 0, 2))
+    if state is None:
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((b, h, hd), -1e30, jnp.float32))
+    else:
+        carry0 = (state["h"], state["c"], state["n"], state["m"])
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, carry0,
+                                        (wx.transpose(1, 0, 2), valid))
     y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
     out = common.dense_apply(params["out"], y, engine)
     return out, {"h": hf, "c": cf, "n": nf, "m": mf}

@@ -1,11 +1,14 @@
-"""repro.serving: continuous-batching inference on a paged fp8-capable
-KV-cache pool.
+"""repro.serving: continuous-batching inference for every decoder-only
+family, on one StateStore — fp8-capable paged KV pools for attention
+layers plus per-slot recurrent state rows for rglru/xlstm layers — with
+chunked prefill interleaving for long prompts.
 
 The paper keeps its CE array at 99.4% utilization by double-buffering tiles
 so the datapath never starves; the serving-side analogue is continuous
 batching — keep the decode GEMMs fed with a full slot batch even as
 requests of different lengths arrive and finish. See docs/DESIGN.md
-(Serving section) for the scheduler state machine and page-table layout.
+(Serving section) for the StateStore layout, masked prefill, the chunk
+interleaving policy and the scheduler state machine.
 
     from repro.serving import Server, ServerConfig, SamplingParams
 
@@ -14,7 +17,13 @@ requests of different lengths arrive and finish. See docs/DESIGN.md
     for ev in server.stream():
         print(ev.rid, ev.token)
 """
-from repro.serving.cache import NULL_PAGE, OutOfPagesError, PagedKVCache, PagePool
+from repro.serving.cache import (
+    NULL_PAGE,
+    OutOfPagesError,
+    PagedKVCache,
+    PagePool,
+    StateStore,
+)
 from repro.serving.sampling import GREEDY, SamplingParams, sample_logits, stack_params
 from repro.serving.scheduler import (
     FINISH_EOS,
@@ -51,6 +60,7 @@ __all__ = [
     "Server",
     "ServerConfig",
     "ServerStats",
+    "StateStore",
     "StaticStats",
     "TokenEvent",
     "generate_static",

@@ -1,16 +1,29 @@
-"""Paged KV-cache pool: fixed-size pages, a free-list allocator, and
-per-request page tables.
+"""The serving StateStore: one device-state abstraction for every sequence
+family — token-paged KV pools for attention layers AND per-slot recurrent
+state rows for rglru/xlstm layers — plus the host-side free-list page
+allocator and the page-table / sequence-length mirrors.
 
-The device side is one flat (num_pages * page_size, Hkv, hd) token pool per
-attention layer (``Transformer.init_paged_pools``), optionally stored in the
-paper's E4M3 format via the existing ``kv_cache_dtype`` plumbing. The host
-side is this module: a free-list :class:`PagePool` plus the
-:class:`PagedKVCache` wrapper that mirrors the page table and sequence
-lengths as numpy arrays the scheduler mutates between jitted steps.
+Layout (``Transformer.init_state_store``):
+
+- attention layers: one flat (num_pages * page_size, Hkv, hd) K/V token
+  pool per layer, optionally stored in the paper's E4M3 format via the
+  existing ``kv_cache_dtype`` plumbing. Requests own pages through a shared
+  page table; token t of a slot lives at
+  ``pool[page_table[slot, t // page_size] * page_size + t % page_size]``.
+- recurrent layers: one (n_slots, ...) array per state leaf (rglru h/conv,
+  mLSTM C/n/m, sLSTM h/c/n/m). A slot's row is its request's entire
+  sequence state — nothing to page, zero page reservation. Rows reset by
+  construction: the first prefill chunk of a new request (start == 0)
+  selects the fresh init state over the stored row inside the jitted step,
+  so recycling a slot never needs a device round-trip.
 
 Page 0 is the **null page**: never handed out, it absorbs the K/V writes of
 prompt padding and inactive slots so every step keeps one fixed shape. Its
 contents are never read back as valid (key positions carry POS_SENTINEL).
+
+The host side is this module: a free-list :class:`PagePool` plus the
+:class:`StateStore` wrapper that mirrors the page table and sequence
+lengths as numpy arrays the scheduler mutates between jitted steps.
 """
 from __future__ import annotations
 
@@ -77,30 +90,41 @@ class PagePool:
             self._free.append(p)
 
 
+def _is_kv_leaf(path) -> bool:
+    """True for KV token-pool leaves ('kp'/'vp'); recurrent rows otherwise."""
+    return any(
+        getattr(k, "key", None) in ("kp", "vp") for k in path
+    )
+
+
 @dataclasses.dataclass
-class PagedKVCache:
-    """Device pools + the host mirror of the page table / sequence lengths.
+class StateStore:
+    """Device pools (KV pages + recurrent state rows) + the host mirror of
+    the page table / sequence lengths.
 
     ``page_table[slot]`` lists the slot's pages in position order (token t
     lives in page ``page_table[slot, t // page_size]`` at offset
-    ``t % page_size``); unused tail entries stay NULL_PAGE. ``seq_lens``
-    counts tokens already cached per slot. Both are numpy so the scheduler
+    ``t % page_size``); unused tail entries stay NULL_PAGE — including
+    entries whose page was recycled out of a sliding window. ``seq_lens``
+    counts tokens already **committed** per slot (mid chunked-prefill that
+    is the prefix prefilled so far). Both are numpy so the scheduler
     mutates them in place; the server ships them to the device per step.
     """
 
-    pools: Any  # model pytree of per-layer {"kp", "vp"} token pools
+    pools: Any  # model pytree: per-layer {"attn": {kp, vp}} | {"state": rows}
     page_table: np.ndarray  # (num_slots, pages_per_slot) int32
     seq_lens: np.ndarray  # (num_slots,) int32
     allocator: PagePool
 
     @classmethod
     def build(cls, model, *, num_slots: int, num_pages: int, page_size: int,
-              pages_per_slot: int, pools=None) -> "PagedKVCache":
+              pages_per_slot: int, pools=None) -> "StateStore":
         """``pools`` reuses existing device pools (Server.reset) instead of
-        allocating fresh zeros — stale K/V are never read back as valid."""
+        allocating fresh zeros — stale K/V are never read back as valid and
+        stale state rows are overwritten by the next start-0 prefill."""
         return cls(
             pools=(pools if pools is not None
-                   else model.init_paged_pools(num_pages, page_size)),
+                   else model.init_state_store(num_slots, num_pages, page_size)),
             page_table=np.zeros((num_slots, pages_per_slot), np.int32),
             seq_lens=np.zeros((num_slots,), np.int32),
             allocator=PagePool(num_pages, page_size),
@@ -118,22 +142,33 @@ class PagedKVCache:
     def page_size(self) -> int:
         return self.allocator.page_size
 
-    def set_pages(self, slot: int, pages: list[int]) -> None:
-        row = np.zeros((self.pages_per_slot,), np.int32)
-        row[: len(pages)] = pages
-        self.page_table[slot] = row
-
-    def append_page(self, slot: int, index: int, page: int) -> None:
+    def set_page(self, slot: int, index: int, page: int) -> None:
         self.page_table[slot, index] = page
+
+    def clear_pages(self, slot: int, indices: list[int]) -> None:
+        """NULL out recycled (out-of-window) page-table entries."""
+        for i in indices:
+            self.page_table[slot, i] = NULL_PAGE
 
     def reset_slot(self, slot: int) -> None:
         self.page_table[slot] = NULL_PAGE
         self.seq_lens[slot] = 0
 
+    def _leaf_bytes(self, want_kv: bool) -> int:
+        total = 0
+        for path, x in jax.tree_util.tree_flatten_with_path(self.pools)[0]:
+            if hasattr(x, "dtype") and _is_kv_leaf(path) == want_kv:
+                total += x.size * x.dtype.itemsize
+        return total
+
     def kv_bytes(self) -> int:
-        """Device bytes held by the KV pools (the fp8-vs-bf16 observable)."""
-        return sum(
-            x.size * x.dtype.itemsize
-            for x in jax.tree.leaves(self.pools)
-            if hasattr(x, "dtype")
-        )
+        """Device bytes held by the KV token pools (the fp8 observable)."""
+        return self._leaf_bytes(True)
+
+    def state_bytes(self) -> int:
+        """Device bytes held by per-slot recurrent state rows."""
+        return self._leaf_bytes(False)
+
+
+# Transitional alias: PR 3 shipped the KV-only store under this name.
+PagedKVCache = StateStore

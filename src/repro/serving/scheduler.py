@@ -1,25 +1,33 @@
 """Continuous-batching scheduler: request queue, admission control, slot
-recycling.
+recycling, chunked-prefill progress tracking.
 
 State machine (docs/DESIGN.md Serving section):
 
-    QUEUED --admit--> RUNNING --finish--> FINISHED
+    QUEUED --admit--> RUNNING(prefilling -> decoding) --finish--> FINISHED
              (slot free + pages reserved + token budget)
 
 A request is admitted when (a) a decode slot is free, (b) the page pool can
-cover its **worst case** (prompt + max_new_tokens, clamped to the slot
-capacity) on top of what already-running requests may still claim, and
-(c) the in-flight token budget has room. Reserving worst-case pages at
-admission means a running request can never fail a mid-decode page
-allocation — the software analogue of RedMulE's double-buffering guarantee
-that the datapath never stalls on a late operand: admission is the only
-place the pipeline may wait.
+cover its **worst case** on top of what already-running requests may still
+claim, and (c) the in-flight token budget has room. The worst case derives
+from the model's actual pool layout (``Transformer.cb_profile``), not from
+the slot capacity: attention-free (pure-recurrent) archs reserve ZERO pages
+— their whole sequence state is one StateStore row — and all-sliding-window
+archs reserve only a window's worth, because out-of-window pages are
+recycled mid-request (``release_out_of_window``). Reserving the worst case
+at admission means a running request can never fail a page allocation — the
+software analogue of RedMulE's double-buffering guarantee that the datapath
+never stalls on a late operand: admission is the only place the pipeline
+may wait.
+
+Pages are allocated lazily as positions are written (prefill chunks and
+decode steps call ``ensure_pages``), so a long prompt under a sliding
+window never holds more than a window of pages even while prefilling.
 
 Admission is FIFO without skipping: if the head of the queue does not fit,
 nothing behind it jumps ahead (no starvation of large requests).
 
 The scheduler owns request bookkeeping and the page allocator; the device
-arrays (pools, page table, seq_lens) live in ``PagedKVCache`` and are
+arrays (pools, page table, seq_lens) live in ``StateStore`` and are
 written by the server that drives the jitted steps.
 """
 from __future__ import annotations
@@ -55,11 +63,17 @@ class Request:
     # Runtime state (scheduler-owned).
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
-    pages: list[int] = dataclasses.field(default_factory=list)
+    # Page per table index; recycled (out-of-window) entries become None.
+    pages: list[Optional[int]] = dataclasses.field(default_factory=list)
     status: str = QUEUED
     finish_reason: Optional[str] = None
     # prompt + generation cap after clamping to cache capacity (set on submit).
     max_total: int = 0
+    # Prompt tokens committed to the StateStore so far (chunked prefill).
+    prefilled: int = 0
+    # Wall-clock marks for TTFT reporting (set by the server).
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -69,11 +83,24 @@ class Request:
     def num_generated(self) -> int:
         return len(self.out_tokens)
 
+    @property
+    def prefilling(self) -> bool:
+        return self.status == RUNNING and self.prefilled < self.prompt_len
+
+    @property
+    def decoding(self) -> bool:
+        return self.status == RUNNING and self.prefilled >= self.prompt_len
+
+    @property
+    def live_pages(self) -> list[int]:
+        return [p for p in self.pages if p is not None]
+
 
 class Scheduler:
     def __init__(self, *, num_slots: int, pool: PagePool, pages_per_slot: int,
                  max_seq_len: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 kv_reserve_tokens: Optional[int] = None):
         self.pool = pool
         self.pages_per_slot = pages_per_slot
         slot_cap = pages_per_slot * pool.page_size
@@ -81,6 +108,10 @@ class Scheduler:
         # Cap on sum(max_total) over running requests; defaults to the whole
         # pool so pages stay the binding constraint unless narrowed.
         self.token_budget = token_budget
+        # Tokens that must be simultaneously page-resident per request:
+        # None = the full sequence; 0 = attention-free (no KV pages at all);
+        # a window bound when every attention layer is sliding-window.
+        self.kv_reserve_tokens = kv_reserve_tokens
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
@@ -94,10 +125,17 @@ class Scheduler:
     def num_free_slots(self) -> int:
         return len(self._free_slots)
 
+    def worst_pages(self, max_total: int) -> int:
+        """Worst-case simultaneous page demand of one request, from the
+        model's pool layout rather than the slot capacity."""
+        if self.kv_reserve_tokens is not None:
+            max_total = min(max_total, self.kv_reserve_tokens)
+        return self.pool.pages_for(max_total)
+
     def _reserved_unallocated(self) -> int:
         """Pages running requests may still claim (worst case minus held)."""
         return sum(
-            self.pool.pages_for(r.max_total) - len(r.pages)
+            max(0, self.worst_pages(r.max_total) - len(r.live_pages))
             for r in self.running.values()
         )
 
@@ -116,7 +154,7 @@ class Scheduler:
                 f"prompt of {request.prompt_len} tokens leaves no room to "
                 f"generate under max_seq_len={self.max_seq_len}"
             )
-        worst = self.pool.pages_for(request.max_total)
+        worst = self.worst_pages(request.max_total)
         if worst > self.pool.num_pages - 1:
             raise ValueError(
                 f"request needs {worst} pages; pool has {self.pool.num_pages - 1}"
@@ -132,11 +170,13 @@ class Scheduler:
 
     def admit(self) -> list[Request]:
         """Move queue heads into free slots while pages + budget allow.
-        Allocates each admitted request's prompt pages; the caller prefills."""
+        Pages are NOT allocated here — the caller's prefill chunks call
+        ``ensure_pages`` as positions are written (lazy allocation keeps a
+        windowed long prompt inside its windowed reservation)."""
         admitted = []
         while self.queue and self._free_slots:
             req = self.queue[0]
-            worst = self.pool.pages_for(req.max_total)
+            worst = self.worst_pages(req.max_total)
             if self.pool.num_free - self._reserved_unallocated() < worst:
                 break
             if (
@@ -146,13 +186,14 @@ class Scheduler:
                 break
             self.queue.popleft()
             req.slot = self._free_slots.pop()
-            req.pages = self.pool.alloc(self.pool.pages_for(req.prompt_len))
+            req.pages = []
+            req.prefilled = 0
             req.status = RUNNING
             self.running[req.slot] = req
             admitted.append(req)
         return admitted
 
-    # -- token commit / recycling -----------------------------------------
+    # -- token commit / paging / recycling ---------------------------------
     def commit(self, req: Request, token: int) -> bool:
         """Record one sampled token; returns True when the request finished
         (EOS, generation cap, or cache capacity)."""
@@ -166,18 +207,41 @@ class Scheduler:
             req.finish_reason = FINISH_LENGTH
         return req.finish_reason is not None
 
-    def ensure_page(self, req: Request, position: int) -> Optional[tuple[int, int]]:
-        """Grow the request's page list to cover a cache write at
-        ``position``. Returns (index, page) when a page was appended — the
-        caller mirrors it into the device page table. Cannot fail for
+    def ensure_pages(self, req: Request, end_position: int) -> list[tuple[int, int]]:
+        """Grow the request's page list to cover cache writes at positions
+        < ``end_position``. Returns the (index, page) pairs appended — the
+        caller mirrors them into the device page table. Cannot fail for
         admitted requests (worst-case pages were reserved)."""
-        idx = position // self.pool.page_size
-        if idx < len(req.pages):
-            return None
-        assert idx == len(req.pages), "cache positions grow one page at a time"
-        (page,) = self.pool.alloc(1)
-        req.pages.append(page)
-        return idx, page
+        need = self.pool.pages_for(end_position)
+        grown = []
+        while len(req.pages) < need:
+            idx = len(req.pages)
+            (page,) = self.pool.alloc(1)
+            req.pages.append(page)
+            grown.append((idx, page))
+        return grown
+
+    def ensure_page(self, req: Request, position: int) -> Optional[tuple[int, int]]:
+        """Single-position form of ``ensure_pages`` (decode's one write)."""
+        grown = self.ensure_pages(req, position + 1)
+        return grown[0] if grown else None
+
+    def release_out_of_window(self, req: Request, seq_len: int,
+                              window: int) -> list[int]:
+        """Free pages every position of which has slid out of the attention
+        window (legal only when ALL attention layers are windowed — the
+        server gates on ``CBProfile.kv_window``). Returns the freed table
+        indices; the caller NULLs them in the device page table."""
+        ps = self.pool.page_size
+        freed = []
+        for idx, page in enumerate(req.pages):
+            if page is None:
+                continue
+            if (idx + 1) * ps - 1 < seq_len - window:
+                self.pool.free([page])
+                req.pages[idx] = None
+                freed.append(idx)
+        return freed
 
     def finish(self, req: Request) -> None:
         """Release the request's slot and pages (recycling them for the
@@ -185,7 +249,7 @@ class Scheduler:
         assert req.slot is not None
         del self.running[req.slot]
         self._free_slots.append(req.slot)
-        self.pool.free(req.pages)
+        self.pool.free(req.live_pages)
         req.pages = []
         req.status = FINISHED
         self.completed += 1

@@ -1,23 +1,28 @@
 """The serving loop: jit-friendly fixed-shape steps driven by the
-continuous-batching scheduler.
+continuous-batching scheduler, for every decoder-only sequence family.
 
 Layout of one ``Server.step()``:
 
-  1. admit queued requests into free slots (pages + budget permitting) and
-     prefill each one (one jit call per prompt-length bucket, batch 1),
-     sampling its first token from the prefill logits;
-  2. run ONE decode step over every slot — active or not — through the
-     paged pool (gather/scatter over slot mappings, shapes never change),
-     sample one token per slot, commit the active ones, recycle finished
-     slots.
+  1. admit queued requests into free slots (pages + budget permitting);
+  2. advance every prefilling request by ONE prompt chunk (the whole
+     prompt when chunked prefill is off). Chunks commit KV pages and
+     recurrent state rows for that slot only; the final chunk samples the
+     request's first token. Interleaving chunks with decode steps bounds
+     how long running requests stall behind a long prompt — the software
+     analog of the paper's double-buffered tile streaming;
+  3. run ONE decode step over every slot — decoding, prefilling or free —
+     through the StateStore (gather/scatter over slot mappings, shapes
+     never change), sample one token per slot, commit the active ones,
+     recycle finished slots. Non-decoding rows write to the null page and
+     keep their state rows untouched.
 
-Tokens stream out as :class:`TokenEvent`s the moment they are sampled.
+Tokens stream out as :class:`TokenEvent`s the moment they are sampled;
+every request records submit -> first-token wall time (TTFT).
 
 The static-batch path (:func:`generate_static`) lives here too: it is the
 baseline the benchmarks compare against and the single implementation behind
-``launch/serve.py`` / ``examples/serve_decode.py`` (which used to carry
-copy-pasted decode loops). Both paths separate compile time from steady-state
-time — reported tok/s never includes tracing.
+``launch/serve.py`` / ``examples/serve_decode.py``. Both paths separate
+compile time from steady-state time — reported tok/s never includes tracing.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.training import make_paged_serve_steps, make_serve_steps
-from repro.serving.cache import PagedKVCache
+from repro.serving.cache import StateStore
 from repro.serving.sampling import (
     GREEDY,
     SamplingParams,
@@ -47,23 +52,27 @@ class ServerConfig:
     num_slots: int = 4  # concurrent decode lanes (the fixed batch)
     page_size: int = 16  # tokens per KV page
     max_seq_len: int = 256  # per-request prompt + generation cap
-    # Total pages in the pool incl. the null page; default covers every slot
-    # at worst case so admission is gated by slots, not pages.
+    # Total pages in the pool incl. the null page; default is computed from
+    # the model's CBProfile (zero KV pages for attention-free archs, a
+    # window's worth for all-sliding-window archs, worst case otherwise)
+    # so admission is gated by slots, not pages.
     num_pages: Optional[int] = None
     token_budget: Optional[int] = None  # cap on sum(max_total) in flight
-    prefill_bucket: int = 32  # prompts pad up to a multiple of this
+    prefill_bucket: int = 32  # unchunked prompts pad up to a multiple of this
+    # Chunked prefill: prompts advance one fixed-size chunk per step,
+    # interleaved with decode steps. None = whole-prompt prefill.
+    prefill_chunk: Optional[int] = None
 
     @property
     def pages_per_slot(self) -> int:
+        # Page-table width: positions are page-indexed absolutely, so the
+        # table always spans max_seq_len even when reservation is windowed
+        # (recycled entries go back to NULL_PAGE).
         return -(-self.max_seq_len // self.page_size)
 
-    @property
-    def resolved_num_pages(self) -> int:
-        if self.num_pages is not None:
-            return self.num_pages
-        return self.num_slots * self.pages_per_slot + 1
-
     def bucket(self, prompt_len: int) -> int:
+        if self.prefill_chunk is not None:
+            return self.prefill_chunk
         b = self.prefill_bucket
         return -(-prompt_len // b) * b
 
@@ -104,38 +113,67 @@ class ServerStats:
 
 
 class Server:
-    """Continuous-batching inference server over a paged KV-cache pool."""
+    """Continuous-batching inference server over the serving StateStore."""
 
     def __init__(self, model, params, config: ServerConfig = ServerConfig(), *,
                  engine=None, backend: Optional[str] = None, seed: int = 0):
-        if not model.supports_paged():
+        if not model.supports_cb():
             raise NotImplementedError(
-                f"{model.cfg.name}: continuous batching needs the paged "
-                "attention path; use generate_static for this family"
+                f"{model.cfg.name}: continuous batching covers decoder-only "
+                "families; use generate_static for this family"
             )
         self.model = model
         self.params = params
         self.config = config
+        self.profile = model.cb_profile()
         self.seed = seed
-        prefill_step, decode_step = make_paged_serve_steps(
+        prefill_full, prefill_chunk, decode_step = make_paged_serve_steps(
             model, page_size=config.page_size, engine=engine, backend=backend,
         )
-        self._prefill = jax.jit(prefill_step)
+        self._prefill_full = jax.jit(prefill_full)
+        self._prefill_chunk = jax.jit(prefill_chunk)
         self._decode = jax.jit(decode_step)
         self._sample = jax.jit(sample_logits)
         self._fresh_state()
 
+    # -- pool sizing -------------------------------------------------------
+    def _reserve_tokens_cap(self) -> Optional[int]:
+        """Tokens a request must keep page-resident at once, from the
+        model's pool layout. None = the full sequence."""
+        cfg, prof = self.config, self.profile
+        if not prof.needs_kv_pages:
+            return 0
+        if prof.kv_window is not None and cfg.prefill_chunk is not None:
+            # Window + one in-flight chunk + slack pages so lazy allocation
+            # ahead of recycling never outruns the reservation. Only sound
+            # under chunked prefill: whole-prompt prefill allocates every
+            # prompt page at once (recycling runs after the jitted call),
+            # so its peak demand is the full prompt, not a window.
+            return min(cfg.max_seq_len,
+                       prof.kv_window + cfg.prefill_chunk + 2 * cfg.page_size)
+        return None
+
+    def _resolved_num_pages(self) -> int:
+        cfg = self.config
+        if cfg.num_pages is not None:
+            return cfg.num_pages
+        cap = self._reserve_tokens_cap()
+        per_slot = -(-min(cfg.max_seq_len, cap if cap is not None
+                          else cfg.max_seq_len) // cfg.page_size)
+        return max(cfg.num_slots * per_slot + 1, 2)
+
     def _fresh_state(self, pools=None) -> None:
         cfg = self.config
-        self.cache = PagedKVCache.build(
+        self.cache = StateStore.build(
             self.model, num_slots=cfg.num_slots,
-            num_pages=cfg.resolved_num_pages, page_size=cfg.page_size,
+            num_pages=self._resolved_num_pages(), page_size=cfg.page_size,
             pages_per_slot=cfg.pages_per_slot, pools=pools,
         )
         self.scheduler = Scheduler(
             num_slots=cfg.num_slots, pool=self.cache.allocator,
             pages_per_slot=cfg.pages_per_slot, max_seq_len=cfg.max_seq_len,
             token_budget=cfg.token_budget,
+            kv_reserve_tokens=self._reserve_tokens_cap(),
         )
         self.stats = ServerStats()
         self.results: dict[int, Request] = {}
@@ -143,26 +181,31 @@ class Server:
 
     def reset(self) -> None:
         """Drop all serving state (keeps compiled steps and the pools —
-        stale K/V are never read back as valid)."""
+        stale K/V and state rows are never read back as valid)."""
         self._fresh_state(pools=self.cache.pools)
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt: Iterable[int], *, max_new_tokens: int = 32,
                sampling: SamplingParams = GREEDY,
                eos_id: Optional[int] = None) -> Request:
-        return self.scheduler.submit(Request(
+        req = self.scheduler.submit(Request(
             prompt=[int(t) for t in prompt], max_new_tokens=max_new_tokens,
             sampling=sampling, eos_id=eos_id,
         ))
+        req.t_submit = time.perf_counter()
+        return req
 
     # -- the step loop -----------------------------------------------------
     def step(self) -> list[TokenEvent]:
-        """One scheduler iteration: admit + prefill, then one decode over
-        all slots. Returns the tokens produced (possibly empty)."""
+        """One scheduler iteration: admit, advance prefills one chunk each,
+        then one decode over all slots. Returns the tokens produced
+        (possibly empty while long prompts are still chunking in)."""
         events: list[TokenEvent] = []
-        for req in self.scheduler.admit():
-            self._prefill_one(req, events)
-        if self.scheduler.running:
+        self.scheduler.admit()
+        for req in list(self.scheduler.running.values()):
+            if req.prefilling:
+                self._prefill_advance(req, events)
+        if any(r.decoding for r in self.scheduler.running.values()):
             self._decode_once(events)
         return events
 
@@ -177,12 +220,22 @@ class Server:
         while self.scheduler.has_work():
             yield from self.step()
 
+    def ttft_percentiles(self, qs=(50, 95)) -> Optional[tuple[float, ...]]:
+        """Submit -> first-token wall seconds at the given percentiles over
+        finished requests (queueing included — the latency continuous
+        batching + chunked prefill actually improve); None before any
+        request finished."""
+        ttft = [r.t_first_token - r.t_submit for r in self.results.values()
+                if r.t_first_token is not None]
+        if not ttft:
+            return None
+        return tuple(float(np.percentile(ttft, q)) for q in qs)
+
     def warmup(self, prompt_lens: Iterable[int], max_new_tokens: int = 2) -> None:
         """Compile the decode/sampling steps and every prefill bucket the
-        given prompt lengths hit, then reset serving state — so a timed run
-        right after measures steady state only. Warm prompts reuse the real
-        lengths (one per distinct bucket), so any length a later submit
-        accepts has its bucket compiled here."""
+        given prompt lengths hit (one fixed chunk shape when chunked
+        prefill is on), then reset serving state — so a timed run right
+        after measures steady state only."""
         seen: set[int] = set()
         for pl in prompt_lens:
             tb = self.config.bucket(pl)
@@ -198,46 +251,80 @@ class Server:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _prefill_one(self, req: Request, events: list[TokenEvent]) -> None:
+    def _mirror_pages(self, req: Request, grown) -> None:
+        for idx, page in grown:
+            self.cache.set_page(req.slot, idx, page)
+
+    def _recycle_window(self, req: Request) -> None:
+        window = self.profile.kv_window
+        if window is None:
+            return
+        freed = self.scheduler.release_out_of_window(
+            req, int(self.cache.seq_lens[req.slot]), window
+        )
+        self.cache.clear_pages(req.slot, freed)
+
+    def _prefill_advance(self, req: Request, events: list[TokenEvent]) -> None:
+        """Run one prompt chunk for one slot: commit its K/V pages and
+        recurrent state row; on the final chunk, sample the first token."""
         cfg = self.config
-        t = req.prompt_len
-        tb = cfg.bucket(t)
+        start = req.prefilled
+        if cfg.prefill_chunk is None:
+            n = req.prompt_len
+            tb = cfg.bucket(n)
+            prefill = self._prefill_full
+        else:
+            n = min(cfg.prefill_chunk, req.prompt_len - start)
+            tb = cfg.prefill_chunk
+            prefill = self._prefill_chunk
+        if self.profile.needs_kv_pages:
+            self._mirror_pages(req, self.scheduler.ensure_pages(req, start + n))
         toks = np.zeros((1, tb), np.int32)
-        toks[0, :t] = req.prompt
-        page_row = np.zeros((cfg.pages_per_slot,), np.int32)
-        page_row[: len(req.pages)] = req.pages
+        toks[0, :n] = req.prompt[start:start + n]
+        # The StateStore mirror is the single source of truth for the row
+        # (kept in sync by _mirror_pages / clear_pages / reset_slot).
+        page_row = self.cache.page_table[req.slot]
         t0 = time.perf_counter()
-        logits, pools = self._prefill(
+        logits, pools = prefill(
             self.params, jnp.asarray(toks), self.cache.pools,
-            jnp.asarray(page_row), jnp.int32(t),
+            jnp.asarray(page_row), jnp.int32(req.slot), jnp.int32(start),
+            jnp.int32(n),
         )
         jax.block_until_ready(logits)
         self.stats.prefill_s += time.perf_counter() - t0
         self.cache.pools = pools
-        self.cache.set_pages(req.slot, req.pages)
-        self.cache.seq_lens[req.slot] = t
+        req.prefilled += n
+        self.cache.seq_lens[req.slot] = req.prefilled
+        self._recycle_window(req)
         self.stats.prefill_calls += 1
-        self.stats.prefill_tokens += t
-        sp = stack_params([req.sampling])
-        tok = self._sample(logits, self._next_key(), **sp)
-        self._commit(req, int(tok[0]), events)
+        self.stats.prefill_tokens += n
+        if req.prefilled == req.prompt_len:
+            sp = stack_params([req.sampling])
+            tok = self._sample(logits, self._next_key(), **sp)
+            self._commit(req, int(tok[0]), events)
 
     def _decode_once(self, events: list[TokenEvent]) -> None:
-        running = list(self.scheduler.running.items())
-        for slot, req in running:
-            grown = self.scheduler.ensure_page(req, int(self.cache.seq_lens[slot]))
-            if grown is not None:
-                self.cache.append_page(slot, *grown)
+        decoding = [(slot, req) for slot, req in self.scheduler.running.items()
+                    if req.decoding]
+        if self.profile.needs_kv_pages:
+            for slot, req in decoding:
+                grown = self.scheduler.ensure_page(
+                    req, int(self.cache.seq_lens[slot]))
+                if grown is not None:
+                    self._mirror_pages(req, [grown])
         n = self.cache.num_slots
         tokens = np.zeros((n, 1), np.int32)
+        active = np.zeros((n,), bool)
         params_list = [GREEDY] * n
-        for slot, req in running:
+        for slot, req in decoding:
             tokens[slot, 0] = req.out_tokens[-1]
+            active[slot] = True
             params_list[slot] = req.sampling
         t0 = time.perf_counter()
         logits, pools = self._decode(
             self.params, jnp.asarray(tokens), self.cache.pools,
             jnp.asarray(self.cache.page_table), jnp.asarray(self.cache.seq_lens),
+            jnp.asarray(active),
         )
         sp = stack_params(params_list)
         toks = np.asarray(self._sample(logits, self._next_key(), **sp))
@@ -245,12 +332,15 @@ class Server:
         self.cache.pools = pools
         self.stats.decode_steps += 1
         self.stats.slot_steps += n
-        self.stats.decode_tokens += len(running)
-        for slot, req in running:
+        self.stats.decode_tokens += len(decoding)
+        for slot, req in decoding:
             self.cache.seq_lens[slot] += 1
+            self._recycle_window(req)
             self._commit(req, int(toks[slot]), events)
 
     def _commit(self, req: Request, token: int, events: list[TokenEvent]) -> None:
+        if req.t_first_token is None:
+            req.t_first_token = time.perf_counter()
         finished = self.scheduler.commit(req, token)
         events.append(TokenEvent(
             rid=req.rid, token=token, index=req.num_generated - 1,

@@ -182,30 +182,42 @@ def make_serve_steps(model: Transformer, *, engine: Engine | None = None,
 def make_paged_serve_steps(model: Transformer, *, page_size: int,
                            engine: Engine | None = None,
                            backend: str | None = None):
-    """Slot-aware (prefill_step, decode_step) pair over a paged KV pool —
-    the fixed-shape steps the continuous-batching scheduler drives
-    (``repro.serving``). Each decode covers every slot at its own length;
-    prefill fills one slot's pages from a right-padded prompt.
+    """Slot-aware (prefill_full, prefill_chunk, decode_step) triple over the
+    serving StateStore — the fixed-shape steps the continuous-batching
+    scheduler drives (``repro.serving``) for EVERY decoder-only family:
+    attention layers page K/V, recurrent layers read/commit per-slot state
+    rows. ``prefill_full`` runs a whole right-padded prompt in one call
+    (attends over the fresh k/v only); ``prefill_chunk`` runs one chunk of
+    a longer prompt, additionally gathering earlier chunks' K/V back
+    through the page table. Each decode covers every slot at its own
+    length, committing only ``active`` rows.
 
-    prefill_step(params, tokens (1, Tb), pools, page_row (P,), length ())
-        -> (logits (1, V), pools)
-    decode_step(params, tokens (S, 1), pools, page_table (S, P), seq_lens (S,))
-        -> (logits (S, V), pools)
+    prefill_*(params, tokens (1, Tb), pools, page_row (P,), slot (),
+              start (), length ()) -> (logits (1, V), pools)
+    decode_step(params, tokens (S, 1), pools, page_table (S, P),
+                seq_lens (S,), active (S,)) -> (logits (S, V), pools)
     """
     eng = resolve_engine(model, engine, backend)
 
-    def prefill_step(params, tokens, pools, page_row, length):
+    def prefill_full(params, tokens, pools, page_row, slot, start, length):
         with engine_scope(eng):
-            return model.prefill_paged(
-                params, tokens, pools, page_row, length,
+            return model.prefill_cb(
+                params, tokens, pools, page_row, slot, start, length,
+                page_size=page_size, chunked=False, engine=eng,
+            )
+
+    def prefill_chunk(params, tokens, pools, page_row, slot, start, length):
+        with engine_scope(eng):
+            return model.prefill_cb(
+                params, tokens, pools, page_row, slot, start, length,
+                page_size=page_size, chunked=True, engine=eng,
+            )
+
+    def decode_step(params, tokens, pools, page_table, seq_lens, active):
+        with engine_scope(eng):
+            return model.decode_cb(
+                params, tokens, pools, page_table, seq_lens, active,
                 page_size=page_size, engine=eng,
             )
 
-    def decode_step(params, tokens, pools, page_table, seq_lens):
-        with engine_scope(eng):
-            return model.decode_paged(
-                params, tokens, pools, page_table, seq_lens,
-                page_size=page_size, engine=eng,
-            )
-
-    return prefill_step, decode_step
+    return prefill_full, prefill_chunk, decode_step

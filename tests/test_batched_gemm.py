@@ -271,8 +271,40 @@ def test_skinny_decode_blocks_clamp_block_m_to_m():
             assert bk >= 256  # freed VMEM goes into the K tile
     # resolve path preserves the skinny tile end to end
     assert tuning.resolve_block_sizes(1, 256, 512, policy=FP32_REF)[0] == 1
-    # just above the skinny table, behavior is the legacy sublane round-up
+    # just above the skinny table, the chunk table rounds M to the sublane
     assert tuning.heuristic_block_sizes(9, 4096, 4096, jnp.float32)[0] == 16
+
+
+def test_chunk_prefill_blocks_round_m_to_chunk():
+    """Chunked-prefill GEMMs (M = chunk size, 16/32/64) get a sublane-sized
+    M tile — never a padded 128-row training tile — with a deeper K tile
+    than the training default."""
+    for m in (16, 32, 64):
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn):
+            bm, bn, bk = tuning.heuristic_block_sizes(m, 4096, 4096, dt)
+            sub = tuning.SUBLANE[jnp.dtype(dt).itemsize]
+            assert bm == -(-m // sub) * sub, (m, dt)
+            assert bm <= 64 < 128
+            assert bn % 128 == 0
+            assert bk >= 256, (m, dt)  # spare VMEM goes into the K tile
+    # Above the chunk table, training tiles resume (problem-clamped).
+    assert tuning.heuristic_block_sizes(256, 4096, 4096, jnp.float32)[0] == 128
+    # The autotune candidate list sweeps the chunk Ms.
+    assert {(16, 128, 512), (32, 128, 256), (64, 128, 256)} <= set(
+        tuning.AUTOTUNE_CANDIDATES
+    )
+
+
+def test_chunk_prefill_gemm_matches_ref(rng):
+    """A chunk-sized (M=16) GEMM through the Pallas path with the
+    auto-selected chunk tile still computes the right thing."""
+    x = jnp.asarray(rng.standard_normal((16, 48)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((48, 20)).astype(np.float32))
+    z = ops.gemm_op(x, w, None, gop=semiring.MATMUL, policy=FP32_REF,
+                    backend="pallas_interpret")
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(x) @ np.asarray(w), rtol=1e-5, atol=1e-5
+    )
 
 
 def test_skinny_decode_gemm_matches_ref(rng):
