@@ -11,6 +11,8 @@ its first decode separately).
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b --smoke \\
       --chunked-prefill 16
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \\
+      --prefix-cache --chunked-prefill 8   # shared-system-prompt workload
 """
 from __future__ import annotations
 
@@ -47,6 +49,20 @@ def main(argv=None):
     ap.add_argument("--chunked-prefill", type=int, default=0, metavar="N",
                     help="split prompts into N-token chunks interleaved "
                          "with decode steps (0 = whole-prompt prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share published prompt pages across requests "
+                         "(refcounted, copy-on-write); the workload then "
+                         "opens every prompt with one shared system prefix "
+                         "so the cache has something to hit")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority for the submitted requests (higher runs "
+                         "first; enables TTFT-aware ordering)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="allow higher-priority requests to evict "
+                         "lower-priority ones that are still prefilling; "
+                         "the workload then submits the second half of the "
+                         "requests at priority+5 after the first half has "
+                         "started prefilling, so preemption actually fires")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -93,7 +109,15 @@ def main(argv=None):
         return
 
     lens = mixed_prompt_lens(args.prompt_len, args.requests)
-    max_seq = max(lens) + args.max_new
+    if args.prefix_cache:
+        # Shared-system-prompt shape: one common prefix + unique tails.
+        sys_prompt = list(rng.integers(0, cfg.vocab_size, size=args.prompt_len))
+        prompts = [sys_prompt + list(rng.integers(0, cfg.vocab_size, size=ln))
+                   for ln in lens]
+    else:
+        prompts = [list(rng.integers(0, cfg.vocab_size, size=ln))
+                   for ln in lens]
+    max_seq = max(len(p) for p in prompts) + args.max_new
     server = Server(
         model, params,
         ServerConfig(
@@ -101,6 +125,7 @@ def main(argv=None):
             max_seq_len=max_seq,
             prefill_bucket=min(32, max(8, args.prompt_len)),
             prefill_chunk=args.chunked_prefill or None,
+            prefix_cache=args.prefix_cache, preemption=args.preempt,
         ),
         engine=eng, seed=args.seed,
     )
@@ -109,12 +134,32 @@ def main(argv=None):
           f"{args.page_size} tokens ({server.cache.kv_bytes() / 1e6:.2f} MB kv, "
           f"{server.cache.state_bytes() / 1e6:.2f} MB recurrent rows; "
           f"kv_window={prof.kv_window})")
-    server.warmup(lens)
-    for ln in lens:
-        server.submit(
-            rng.integers(0, cfg.vocab_size, size=ln),
-            max_new_tokens=args.max_new, sampling=sampling,
-        )
+    if args.prefix_cache and not server.prefix_cache:
+        print(f"note: prefix cache disabled — {cfg.name} keeps recurrent "
+              "state rows (cached pages cannot replace their updates)")
+    if args.preempt and not args.chunked_prefill:
+        print("note: --preempt is inert without --chunked-prefill — "
+              "whole-prompt mode fully prefills a request in the step it "
+              "is admitted, so there is never a prefilling victim")
+    server.warmup([len(p) for p in prompts])
+
+    def submit(p, priority):
+        server.submit(p, max_new_tokens=args.max_new, sampling=sampling,
+                      priority=priority)
+
+    if args.preempt:
+        # Priority burst: the first half starts prefilling at the base
+        # priority, then the second half arrives above it — a uniform
+        # priority could never trigger a preemption.
+        half = max(1, len(prompts) // 2)
+        for p in prompts[:half]:
+            submit(p, args.priority)
+        server.step()
+        for p in prompts[half:]:
+            submit(p, args.priority + 5)
+    else:
+        for p in prompts:
+            submit(p, args.priority)
     results = server.run()
     s = server.stats
     print(f"continuous: {len(results)} requests, {s.decode_tokens} decode "
@@ -126,6 +171,12 @@ def main(argv=None):
     ttft = server.ttft_percentiles()
     if ttft is not None:
         print(f"ttft: p50 {ttft[0] * 1e3:.1f} ms, p95 {ttft[1] * 1e3:.1f} ms")
+    if server.prefix_cache:
+        print(f"prefix cache: hit-rate {s.prefix_hit_rate:.0%} "
+              f"({s.prefix_hit_tokens}/{s.prefix_prompt_tokens} prompt "
+              f"tokens), {s.cow_copies} cow copies")
+    if args.preempt:
+        print(f"preemptions: {s.preemptions}")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}: prompt {r.prompt_len:>3} -> "

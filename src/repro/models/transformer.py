@@ -36,10 +36,14 @@ class CBProfile(NamedTuple):
     kv_window: set when EVERY attention layer is sliding-window — pages
         whose positions fall out of the window can be recycled mid-request
         and admission reserves only a window's worth of pages.
+    has_state_rows: any recurrent layer present — the serving layer must
+        disable prefix caching (shared KV pages cannot stand in for the
+        skipped positions' recurrent state updates).
     """
 
     needs_kv_pages: bool
     kv_window: int | None
+    has_state_rows: bool = False
 
 
 def _row_mask(mask, leaf):
@@ -529,7 +533,12 @@ class Transformer:
             and self.cfg.sliding_window
         ):
             window = self.cfg.sliding_window
-        return CBProfile(needs_kv_pages=bool(attn_kinds), kv_window=window)
+        return CBProfile(
+            needs_kv_pages=bool(attn_kinds), kv_window=window,
+            has_state_rows=any(
+                k not in ("attn", "attn_local") for k in self.pattern
+            ),
+        )
 
     def init_state_store(self, num_slots: int, num_pages: int, page_size: int):
         """Per-layer serving state: attention layers get flat KV token pools

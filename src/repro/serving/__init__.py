@@ -1,7 +1,9 @@
 """repro.serving: continuous-batching inference for every decoder-only
 family, on one StateStore — fp8-capable paged KV pools for attention
 layers plus per-slot recurrent state rows for rglru/xlstm layers — with
-chunked prefill interleaving for long prompts.
+chunked prefill interleaving for long prompts, content-addressable prefix
+caching (refcounted page sharing with copy-on-write), and TTFT-aware
+scheduling (priorities, preemption, anti-starvation aging).
 
 The paper keeps its CE array at 99.4% utilization by double-buffering tiles
 so the datapath never starves; the serving-side analogue is continuous
@@ -23,6 +25,8 @@ from repro.serving.cache import (
     PagedKVCache,
     PagePool,
     StateStore,
+    copy_kv_page,
+    prefix_block_hashes,
 )
 from repro.serving.sampling import GREEDY, SamplingParams, sample_logits, stack_params
 from repro.serving.scheduler import (
@@ -63,7 +67,9 @@ __all__ = [
     "StateStore",
     "StaticStats",
     "TokenEvent",
+    "copy_kv_page",
     "generate_static",
+    "prefix_block_hashes",
     "sample_logits",
     "stack_params",
 ]

@@ -24,16 +24,58 @@ contents are never read back as valid (key positions carry POS_SENTINEL).
 The host side is this module: a free-list :class:`PagePool` plus the
 :class:`StateStore` wrapper that mirrors the page table and sequence
 lengths as numpy arrays the scheduler mutates between jitted steps.
+
+Prefix caching makes the pool **content-addressable**: every page carries a
+refcount, and full pages written during prefill are published to a
+hash -> page index keyed on the chained token-block hash
+(:func:`prefix_block_hashes`). A later request with the same prompt prefix
+maps the published pages into its own page table at refcount+1 instead of
+re-prefilling them; a page whose refcount drops to zero keeps its index
+entry while it sits on the free list (so a preempted request's progress —
+or a finished request's system prompt — stays matchable) and is only
+evicted when the allocator reuses the physical page. K/V content depends
+only on the token prefix (attention is causal), so the token-block chain
+is the complete cache key.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
 
 NULL_PAGE = 0
+
+
+def prefix_block_hashes(tokens: Sequence[int], page_size: int) -> list[int]:
+    """Chained content hashes of the full token blocks of a prompt: block i
+    is keyed on (hash of blocks < i, its page_size token ids), so equal
+    hashes mean equal whole prefixes, not just equal blocks. Only full
+    blocks are hashable — a partial tail block is never published."""
+    hashes: list[int] = []
+    parent: Optional[int] = None
+    for i in range(len(tokens) // page_size):
+        block = tuple(int(t) for t in tokens[i * page_size:(i + 1) * page_size])
+        parent = hash((parent, block))
+        hashes.append(parent)
+    return hashes
+
+
+def copy_kv_page(pools, src, dst, *, page_size: int):
+    """Copy one page's token rows in every KV pool leaf (recurrent state
+    rows untouched) — the copy-on-write step for a shared partial page.
+    ``src``/``dst`` may be traced scalars; the token axis of a pool leaf is
+    ndim-3 ((n_tok, Hkv, hd), with a leading unit axis when vmapped)."""
+    def leaf(path, x):
+        if not _is_kv_leaf(path):
+            return x
+        axis = x.ndim - 3
+        rows = jax.lax.dynamic_slice_in_dim(x, src * page_size, page_size,
+                                            axis=axis)
+        return jax.lax.dynamic_update_slice_in_dim(x, rows, dst * page_size,
+                                                   axis=axis)
+    return jax.tree_util.tree_map_with_path(leaf, pools)
 
 
 class OutOfPagesError(RuntimeError):
@@ -43,11 +85,18 @@ class OutOfPagesError(RuntimeError):
 
 
 class PagePool:
-    """Host-side free-list allocator over ``num_pages`` fixed-size pages.
+    """Host-side refcounting free-list allocator over ``num_pages``
+    fixed-size pages, plus the content-addressable prefix index.
 
-    LIFO free list: recycled pages are reused first, keeping the hot region
-    of the device pool small. All methods are O(n) host ops that run between
-    jitted steps, never inside them.
+    Every allocated page carries a refcount: ``alloc`` hands out pages at
+    refcount 1, prefix sharing takes them at refcount+1 (``acquire``), and
+    ``decref`` returns a page to the free list only when the last reference
+    drops. ``publish`` registers a held page's contents under its
+    token-block hash; the entry outlives the refcount (a free published
+    page is revivable until the allocator reuses it — reuse prefers
+    unpublished pages, then evicts the least-recently-freed published one,
+    so resident prefixes live as long as pool pressure allows). All methods
+    are O(n) host ops that run between jitted steps, never inside them.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -58,7 +107,9 @@ class PagePool:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free = list(range(num_pages - 1, 0, -1))
-        self._held: set[int] = set()
+        self._refs: dict[int, int] = {}
+        self._hash_to_page: dict[int, int] = {}
+        self._page_to_hash: dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
@@ -66,11 +117,28 @@ class PagePool:
 
     @property
     def num_held(self) -> int:
-        return len(self._held)
+        return len(self._refs)
+
+    @property
+    def num_published(self) -> int:
+        return len(self._hash_to_page)
+
+    def ref(self, page: int) -> int:
+        """Current refcount of a page (0 when free)."""
+        return self._refs.get(page, 0)
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache slots."""
         return max(0, -(-n_tokens // self.page_size))
+
+    def _pop_free(self) -> int:
+        # Prefer pages with no published content (LIFO keeps the hot device
+        # region small); only under pressure evict a cached prefix page —
+        # the least recently freed one, so resident prefixes live longest.
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._free[i] not in self._page_to_hash:
+                return self._free.pop(i)
+        return self._free.pop(0)
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
@@ -78,16 +146,71 @@ class PagePool:
                 f"requested {n} pages, {len(self._free)} free "
                 f"(of {self.num_pages - 1} allocatable)"
             )
-        pages = [self._free.pop() for _ in range(n)]
-        self._held.update(pages)
+        pages = []
+        for _ in range(n):
+            p = self._pop_free()
+            self._evict(p)  # contents are about to be overwritten
+            self._refs[p] = 1
+            pages.append(p)
         return pages
 
-    def free(self, pages: list[int]) -> None:
+    def incref(self, pages: list[int]) -> None:
         for p in pages:
-            if p not in self._held:
+            if p not in self._refs:
                 raise ValueError(f"page {p} is not currently allocated")
-            self._held.remove(p)
-            self._free.append(p)
+            self._refs[p] += 1
+
+    def decref(self, pages: list[int]) -> None:
+        """Drop one reference per page; the last drop frees the page (its
+        prefix-index entry, if any, survives until the page is reused)."""
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"page {p} is not currently allocated")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    # ``free`` is the historical name; with refcounts it is exactly decref
+    # (callers that never share pages see the old semantics unchanged).
+    free = decref
+
+    # -- prefix index ------------------------------------------------------
+    def publish(self, page: int, block_hash: int) -> None:
+        """Register a held page's contents under its token-block hash. The
+        first writer wins: if the hash is already indexed (same content on
+        another page, or this page re-published after a preemption resume)
+        this is a no-op, so published pages are never written again."""
+        if page not in self._refs:
+            raise ValueError(f"page {page} is not currently allocated")
+        if block_hash in self._hash_to_page:
+            return
+        self._evict(page)  # one page indexes at most one block
+        self._hash_to_page[block_hash] = page
+        self._page_to_hash[page] = block_hash
+
+    def lookup(self, block_hash: int) -> Optional[int]:
+        """Peek the index without touching refcounts."""
+        return self._hash_to_page.get(block_hash)
+
+    def acquire(self, block_hash: int) -> Optional[int]:
+        """Take one reference on the page published under ``block_hash``
+        (reviving it from the free list when its refcount had dropped to
+        zero); None on a cache miss."""
+        p = self._hash_to_page.get(block_hash)
+        if p is None:
+            return None
+        if p in self._refs:
+            self._refs[p] += 1
+        else:
+            self._free.remove(p)
+            self._refs[p] = 1
+        return p
+
+    def _evict(self, page: int) -> None:
+        h = self._page_to_hash.pop(page, None)
+        if h is not None:
+            del self._hash_to_page[h]
 
 
 def _is_kv_leaf(path) -> bool:

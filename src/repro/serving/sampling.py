@@ -53,11 +53,15 @@ def sample_logits(logits, key, temperature, top_k, top_p):
     kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
     scaled = jnp.where(scaled < kth, NEG_INF, scaled)
     # top-p: smallest prefix of the sorted distribution with mass >= top_p.
-    # `cum - p < top_p` keeps at least the top token even for tiny top_p.
+    # The first sorted column is forced to survive: `cum - p < top_p` alone
+    # drops EVERY column at top_p=0.0 (the first column has cum - p == 0),
+    # which masked all logits to NEG_INF and degenerated the draw to
+    # uniform-random over the vocabulary.
     sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
     probs = jax.nn.softmax(sorted_desc, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     keep = (cum - probs) < top_p[:, None]
+    keep = keep.at[:, 0].set(True)
     thresh = jnp.min(
         jnp.where(keep, sorted_desc, jnp.inf), axis=-1, keepdims=True
     )

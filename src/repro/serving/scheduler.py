@@ -1,10 +1,12 @@
-"""Continuous-batching scheduler: request queue, admission control, slot
-recycling, chunked-prefill progress tracking.
+"""Continuous-batching scheduler: request queue, priority + aging,
+prefix-cache-aware admission control, preemption, slot recycling,
+chunked-prefill progress tracking.
 
 State machine (docs/DESIGN.md Serving section):
 
     QUEUED --admit--> RUNNING(prefilling -> decoding) --finish--> FINISHED
-             (slot free + pages reserved + token budget)
+             ^            | (preempt: prefilling only)
+             +------------+
 
 A request is admitted when (a) a decode slot is free, (b) the page pool can
 cover its **worst case** on top of what already-running requests may still
@@ -19,11 +21,32 @@ software analogue of RedMulE's double-buffering guarantee that the datapath
 never stalls on a late operand: admission is the only place the pipeline
 may wait.
 
+With prefix caching on, admission first matches the longest published
+prefix of the prompt (chained token-block hashes against the pool's
+index), maps the matched full pages into the request at refcount+1, and
+charges only the *non-cached suffix* against the page reservation. When
+the match ends inside a page (the prompt covers part of a published
+block, or the whole prompt is cached and the last token must be recomputed
+for its logits), that page is copied on write: a fresh page is allocated,
+the server copies the cached contents, and the request owns the copy.
+
+Requests carry a ``priority`` (higher runs first; FIFO within a level) and
+the scheduler can **preempt**: when the head of the queue cannot be
+admitted, a strictly lower-priority request that is still *prefilling* is
+evicted back to QUEUED. With prefix caching on, its committed full pages
+stay in the index, so its resume is mostly a cache hit; without it (or on
+archs where caching auto-disables), eviction costs the victim its whole
+prefill — pair preemption with prefix caching where possible. An aging
+rule guards against starvation: every admission pass a request waits bumps its age, and
+effective priority = priority + age // aging_steps, so a long-waiting (or
+repeatedly preempted) request eventually outranks — and becomes
+non-preemptible by — fresh high-priority arrivals.
+
 Pages are allocated lazily as positions are written (prefill chunks and
 decode steps call ``ensure_pages``), so a long prompt under a sliding
 window never holds more than a window of pages even while prefilling.
 
-Admission is FIFO without skipping: if the head of the queue does not fit,
+Admission is in priority order without skipping: if the head does not fit,
 nothing behind it jumps ahead (no starvation of large requests).
 
 The scheduler owns request bookkeeping and the page allocator; the device
@@ -34,10 +57,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
-from repro.serving.cache import PagePool
+from repro.serving.cache import PagePool, prefix_block_hashes
 from repro.serving.sampling import GREEDY, SamplingParams
 
 QUEUED = "queued"
@@ -46,8 +68,6 @@ FINISHED = "finished"
 
 FINISH_EOS = "eos"
 FINISH_LENGTH = "length"
-
-_rid_counter = itertools.count()
 
 
 @dataclasses.dataclass
@@ -58,7 +78,12 @@ class Request:
     max_new_tokens: int = 32
     sampling: SamplingParams = GREEDY
     eos_id: Optional[int] = None
-    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+    # Higher runs first; FIFO within a level. Aging (see Scheduler) keeps
+    # low-priority requests from starving.
+    priority: int = 0
+    # Assigned by Scheduler.submit (per-scheduler counter: a fresh server
+    # always starts at rid 0, independent of import or test order).
+    rid: Optional[int] = None
 
     # Runtime state (scheduler-owned).
     out_tokens: list[int] = dataclasses.field(default_factory=list)
@@ -70,7 +95,20 @@ class Request:
     # prompt + generation cap after clamping to cache capacity (set on submit).
     max_total: int = 0
     # Prompt tokens committed to the StateStore so far (chunked prefill).
+    # A prefix hit starts this at cached_tokens: those positions are mapped,
+    # not recomputed.
     prefilled: int = 0
+    # Prompt tokens satisfied from the prefix cache at (the last) admission.
+    cached_tokens: int = 0
+    # (src, dst) device page copies the server must run before prefilling
+    # (copy-on-write of a partially-used shared page).
+    pending_copies: list[tuple[int, int]] = dataclasses.field(default_factory=list)
+    # Chained token-block hashes of the prompt (memoized per page size).
+    _block_hashes: Optional[list[int]] = None
+    # Admission passes spent waiting in the queue (drives aging).
+    age: int = 0
+    # Times this request was preempted back to QUEUED.
+    preemptions: int = 0
     # Wall-clock marks for TTFT reporting (set by the server).
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
@@ -100,7 +138,10 @@ class Scheduler:
     def __init__(self, *, num_slots: int, pool: PagePool, pages_per_slot: int,
                  max_seq_len: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 kv_reserve_tokens: Optional[int] = None):
+                 kv_reserve_tokens: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 preemption: bool = False,
+                 aging_steps: int = 32):
         self.pool = pool
         self.pages_per_slot = pages_per_slot
         slot_cap = pages_per_slot * pool.page_size
@@ -112,10 +153,19 @@ class Scheduler:
         # None = the full sequence; 0 = attention-free (no KV pages at all);
         # a window bound when every attention layer is sliding-window.
         self.kv_reserve_tokens = kv_reserve_tokens
-        self.queue: deque[Request] = deque()
+        self.prefix_cache = prefix_cache
+        self.preemption = preemption
+        self.aging_steps = max(1, aging_steps)
+        self.queue: list[Request] = []
         self.running: dict[int, Request] = {}
         self._free_slots = list(range(num_slots - 1, -1, -1))
+        self._rids = itertools.count()
         self.completed = 0
+        self.preemptions = 0
+        # Prefix-cache accounting over admissions (a preempted request's
+        # resume counts again — its hit is a genuine saving).
+        self.prefix_hit_tokens = 0
+        self.prefix_prompt_tokens = 0
 
     # -- introspection -----------------------------------------------------
     def has_work(self) -> bool:
@@ -125,6 +175,11 @@ class Scheduler:
     def num_free_slots(self) -> int:
         return len(self._free_slots)
 
+    def effective_priority(self, req: Request) -> int:
+        """Priority after anti-starvation aging: one level gained per
+        ``aging_steps`` admission passes spent waiting."""
+        return req.priority + req.age // self.aging_steps
+
     def worst_pages(self, max_total: int) -> int:
         """Worst-case simultaneous page demand of one request, from the
         model's pool layout rather than the slot capacity."""
@@ -133,7 +188,9 @@ class Scheduler:
         return self.pool.pages_for(max_total)
 
     def _reserved_unallocated(self) -> int:
-        """Pages running requests may still claim (worst case minus held)."""
+        """Pages running requests may still claim (worst case minus held).
+        A prefix-hit request's mapped pages count as held, so its residual
+        claim is automatically only the uncached suffix."""
         return sum(
             max(0, self.worst_pages(r.max_total) - len(r.live_pages))
             for r in self.running.values()
@@ -164,34 +221,205 @@ class Scheduler:
                 f"request of {request.max_total} tokens exceeds the "
                 f"token budget of {self.token_budget}"
             )
+        if request.rid is None:
+            request.rid = next(self._rids)
         request.status = QUEUED
         self.queue.append(request)
         return request
 
-    def admit(self) -> list[Request]:
-        """Move queue heads into free slots while pages + budget allow.
-        Pages are NOT allocated here — the caller's prefill chunks call
-        ``ensure_pages`` as positions are written (lazy allocation keeps a
-        windowed long prompt inside its windowed reservation)."""
+    # -- prefix cache ------------------------------------------------------
+    def _hashes(self, req: Request) -> list[int]:
+        if req._block_hashes is None:
+            req._block_hashes = prefix_block_hashes(
+                req.prompt, self.pool.page_size
+            )
+        return req._block_hashes
+
+    def _match_prefix(self, req: Request):
+        """Acquire the longest published prefix of the prompt. Returns
+        (shared full pages, COW source page or None, cached token count).
+        At least the prompt's last token is always left uncached so the
+        final prefill chunk can produce the first sampled logits; when that
+        cap lands inside a matched block, the block becomes the COW source
+        instead of being shared in place."""
+        if not (self.prefix_cache and req.prompt_len > 1):
+            return [], None, 0
+        ps = self.pool.page_size
+        acquired: list[int] = []
+        for h in self._hashes(req):
+            p = self.pool.acquire(h)
+            if p is None:
+                break
+            acquired.append(p)
+        if not acquired:
+            return [], None, 0
+        n_full = min(len(acquired), (req.prompt_len - 1) // ps)
+        partial_tokens = 0
+        cow_src = None
+        if len(acquired) > n_full:
+            # Block n_full is published but only partially usable.
+            partial_tokens = (req.prompt_len - 1) - n_full * ps
+            if partial_tokens > 0:
+                cow_src = acquired[n_full]
+                self.pool.decref(acquired[n_full + 1:])
+            else:
+                self.pool.decref(acquired[n_full:])
+        cached = n_full * ps + partial_tokens
+        return acquired[:n_full], cow_src, cached
+
+    def publish_prefix(self, req: Request) -> None:
+        """Publish the request's committed full *prompt* pages to the
+        prefix index (no-op per page once its block hash is indexed).
+        Called by the server after each prefill chunk commits."""
+        if not self.prefix_cache:
+            return
+        ps = self.pool.page_size
+        hashes = self._hashes(req)
+        n_full = min(req.prefilled, req.prompt_len) // ps
+        for i in range(min(n_full, len(hashes))):
+            if i < len(req.pages) and req.pages[i] is not None:
+                self.pool.publish(req.pages[i], hashes[i])
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, on_preempt: Optional[Callable[[int], None]] = None
+              ) -> list[Request]:
+        """Move queue heads (priority order, aged) into free slots while
+        pages + budget allow, preempting strictly lower-priority prefilling
+        requests for the head when enabled. Suffix pages are NOT allocated
+        here — the caller's prefill chunks call ``ensure_pages`` as
+        positions are written. ``on_preempt(slot)`` lets the server reset
+        the victim's device page-table row."""
         admitted = []
-        while self.queue and self._free_slots:
+        # Priorities and ages are fixed within one pass: sort once, and
+        # again only when a preemption appends its victim to the queue.
+        key = lambda r: (-self.effective_priority(r), r.rid)  # noqa: E731
+        self.queue.sort(key=key)
+        while self.queue:
             req = self.queue[0]
-            worst = self.worst_pages(req.max_total)
-            if self.pool.num_free - self._reserved_unallocated() < worst:
+            ok = self._try_admit(req)
+            while not ok and self.preemption and self._preempt_one(req, on_preempt):
+                self.queue.sort(key=key)
+                ok = self._try_admit(req)
+            if not ok:
+                for r in self.queue:
+                    r.age += 1
                 break
-            if (
-                self.token_budget is not None
-                and self._inflight_tokens() + req.max_total > self.token_budget
-            ):
-                break
-            self.queue.popleft()
-            req.slot = self._free_slots.pop()
-            req.pages = []
-            req.prefilled = 0
-            req.status = RUNNING
-            self.running[req.slot] = req
+            self.queue.pop(0)
             admitted.append(req)
         return admitted
+
+    def _try_admit(self, req: Request) -> bool:
+        """Check slot / budget / pages for one request and install it when
+        everything fits. Prefix-matched pages are acquired first so the
+        free-page check naturally charges only the uncached suffix."""
+        if not self._free_slots:
+            return False
+        if (
+            self.token_budget is not None
+            and self._inflight_tokens() + req.max_total > self.token_budget
+        ):
+            return False
+        shared, cow_src, cached = self._match_prefix(req)
+        suffix = max(0, self.worst_pages(req.max_total) - len(shared))
+        if cow_src is not None:
+            suffix = max(suffix, 1)  # the COW copy comes from the free list
+        if self.pool.num_free - self._reserved_unallocated() < suffix:
+            self.pool.decref(shared + ([cow_src] if cow_src is not None else []))
+            return False
+        req.slot = self._free_slots.pop()
+        req.pages = list(shared)
+        req.pending_copies = []
+        if cow_src is not None:
+            (dst,) = self.pool.alloc(1)
+            req.pages.append(dst)
+            req.pending_copies.append((cow_src, dst))
+            self.pool.decref([cow_src])
+        req.cached_tokens = cached
+        req.prefilled = cached
+        req.status = RUNNING
+        self.running[req.slot] = req
+        self.prefix_hit_tokens += cached
+        self.prefix_prompt_tokens += req.prompt_len
+        return True
+
+    # -- preemption --------------------------------------------------------
+    def _matchable_prefix_pages(self, req: Request) -> int:
+        """Published full pages the prompt could map, by index lookup only
+        (no refcounts touched) — the optimistic prefix credit used when
+        judging preemption feasibility."""
+        if not (self.prefix_cache and req.prompt_len > 1):
+            return 0
+        n = 0
+        for h in self._hashes(req):
+            if self.pool.lookup(h) is None:
+                break
+            n += 1
+        return min(n, (req.prompt_len - 1) // self.pool.page_size)
+
+    def _preempt_one(self, for_req: Request,
+                     on_preempt: Optional[Callable[[int], None]]) -> bool:
+        """Evict the lowest-effective-priority *prefilling* request that is
+        strictly below ``for_req`` (most recent first on ties); False when
+        no eligible victim exists — or when evicting even ALL of them could
+        not admit ``for_req``, so no committed prefill work is destroyed
+        for nothing."""
+        cand = self.effective_priority(for_req)
+        victims = [
+            r for r in self.running.values()
+            if r.prefilling and self.effective_priority(r) < cand
+        ]
+        if not victims:
+            return False
+        # Feasibility with every eligible victim gone (optimistic bound).
+        suffix = max(0, self.worst_pages(for_req.max_total)
+                     - self._matchable_prefix_pages(for_req))
+        potential_free = self.pool.num_free + sum(
+            len(v.live_pages) for v in victims
+        )
+        victim_ids = {id(v) for v in victims}
+        reserved_wo = sum(
+            max(0, self.worst_pages(r.max_total) - len(r.live_pages))
+            for r in self.running.values() if id(r) not in victim_ids
+        )
+        if potential_free - reserved_wo < suffix:
+            return False
+        if self.token_budget is not None and (
+            self._inflight_tokens()
+            - sum(v.max_total for v in victims)
+            + for_req.max_total > self.token_budget
+        ):
+            return False
+        victim = min(victims, key=lambda r: (self.effective_priority(r), -r.rid))
+        self.preempt(victim, on_preempt)
+        return True
+
+    def preempt(self, req: Request,
+                on_preempt: Optional[Callable[[int], None]] = None) -> None:
+        """Evict a prefilling request back to QUEUED. Its pages are
+        dereferenced — with prefix caching on, the full prompt pages it
+        already committed stay in the index so its resume is mostly a
+        cache hit; with it off the victim re-prefills from scratch. Age is
+        kept: a repeatedly preempted request climbs the priority order."""
+        if not req.prefilling:
+            raise ValueError(
+                f"request {req.rid} is not prefilling (status={req.status}); "
+                "only prefilling requests can be preempted"
+            )
+        slot = req.slot
+        del self.running[slot]
+        self._free_slots.append(slot)
+        self.pool.decref(req.live_pages)
+        req.pages = []
+        req.pending_copies = []
+        req.prefilled = 0
+        req.cached_tokens = 0
+        req.slot = None
+        req.status = QUEUED
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.append(req)
+        if on_preempt is not None:
+            on_preempt(slot)
 
     # -- token commit / paging / recycling ---------------------------------
     def commit(self, req: Request, token: int) -> bool:
@@ -228,28 +456,36 @@ class Scheduler:
 
     def release_out_of_window(self, req: Request, seq_len: int,
                               window: int) -> list[int]:
-        """Free pages every position of which has slid out of the attention
-        window (legal only when ALL attention layers are windowed — the
-        server gates on ``CBProfile.kv_window``). Returns the freed table
-        indices; the caller NULLs them in the device page table."""
+        """Decref pages every position of which has slid out of the
+        attention window (legal only when ALL attention layers are windowed
+        — the server gates on ``CBProfile.kv_window``). Returns the freed
+        table indices; the caller NULLs them in the device page table."""
         ps = self.pool.page_size
         freed = []
         for idx, page in enumerate(req.pages):
             if page is None:
                 continue
             if (idx + 1) * ps - 1 < seq_len - window:
-                self.pool.free([page])
+                self.pool.decref([page])
                 req.pages[idx] = None
                 freed.append(idx)
         return freed
 
     def finish(self, req: Request) -> None:
-        """Release the request's slot and pages (recycling them for the
-        queue) and mark it finished."""
-        assert req.slot is not None
+        """Release the request's slot and dereference its pages (recycling
+        them for the queue) and mark it finished. Idempotent: a second call
+        on an already-finished request is a no-op — it must never free the
+        slot's *new* tenant or double-free pages (and ``assert`` would be
+        stripped under ``python -O``)."""
+        if req.status == FINISHED:
+            return
+        if req.slot is None or self.running.get(req.slot) is not req:
+            raise ValueError(
+                f"request {req.rid} is not running (status={req.status})"
+            )
         del self.running[req.slot]
         self._free_slots.append(req.slot)
-        self.pool.free(req.live_pages)
+        self.pool.decref(req.live_pages)
         req.pages = []
         req.status = FINISHED
         self.completed += 1

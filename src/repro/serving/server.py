@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.training import make_paged_serve_steps, make_serve_steps
-from repro.serving.cache import StateStore
+from repro.serving.cache import StateStore, copy_kv_page
 from repro.serving.sampling import (
     GREEDY,
     SamplingParams,
@@ -62,6 +62,18 @@ class ServerConfig:
     # Chunked prefill: prompts advance one fixed-size chunk per step,
     # interleaved with decode steps. None = whole-prompt prefill.
     prefill_chunk: Optional[int] = None
+    # Prefix caching: published full prompt pages are shared (refcounted,
+    # copy-on-write on a partial tail) into later requests with the same
+    # prompt prefix. Auto-disabled for models with recurrent state rows —
+    # skipping prefill positions would skip their state updates.
+    prefix_cache: bool = False
+    # Preemptive scheduling: a queued higher-priority request may evict a
+    # strictly lower-priority request that is still prefilling (its
+    # published pages make the resume mostly a cache hit).
+    preemption: bool = False
+    # Admission passes a queued request waits per effective-priority level
+    # gained (anti-starvation aging).
+    aging_steps: int = 32
 
     @property
     def pages_per_slot(self) -> int:
@@ -96,12 +108,25 @@ class ServerStats:
     slot_steps: int = 0  # decode_steps * num_slots (capacity offered)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # Prefix cache: prompt tokens satisfied from published pages vs all
+    # prompt tokens admitted (a preempted request's resume counts again).
+    prefix_hit_tokens: int = 0
+    prefix_prompt_tokens: int = 0
+    cow_copies: int = 0  # copy-on-write page copies performed
+    preemptions: int = 0  # prefilling requests evicted back to the queue
 
     @property
     def utilization(self) -> float:
         """Fraction of offered decode-lane steps that produced a token —
         the serving analogue of the paper's CE-array utilization."""
         return self.decode_tokens / self.slot_steps if self.slot_steps else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the prefix cache."""
+        if not self.prefix_prompt_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_prompt_tokens
 
     @property
     def decode_tok_s(self) -> float:
@@ -115,8 +140,13 @@ class ServerStats:
 class Server:
     """Continuous-batching inference server over the serving StateStore."""
 
-    def __init__(self, model, params, config: ServerConfig = ServerConfig(), *,
+    def __init__(self, model, params, config: Optional[ServerConfig] = None, *,
                  engine=None, backend: Optional[str] = None, seed: int = 0):
+        # None sentinel, NOT a default instance: a module-level default
+        # would be one shared object evaluated at import time, bleeding any
+        # mutation between servers.
+        if config is None:
+            config = ServerConfig()
         if not model.supports_cb():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching covers decoder-only "
@@ -126,6 +156,14 @@ class Server:
         self.params = params
         self.config = config
         self.profile = model.cb_profile()
+        # Prefix caching shares KV pages only; a model with recurrent state
+        # rows cannot skip prefill positions (their state updates would be
+        # skipped too), so the knob auto-disables there.
+        self.prefix_cache = (
+            config.prefix_cache
+            and self.profile.needs_kv_pages
+            and not self.profile.has_state_rows
+        )
         self.seed = seed
         prefill_full, prefill_chunk, decode_step = make_paged_serve_steps(
             model, page_size=config.page_size, engine=engine, backend=backend,
@@ -134,6 +172,10 @@ class Server:
         self._prefill_chunk = jax.jit(prefill_chunk)
         self._decode = jax.jit(decode_step)
         self._sample = jax.jit(sample_logits)
+        ps = config.page_size
+        self._copy_page = jax.jit(
+            lambda pools, src, dst: copy_kv_page(pools, src, dst, page_size=ps)
+        )
         self._fresh_state()
 
     # -- pool sizing -------------------------------------------------------
@@ -174,6 +216,8 @@ class Server:
             pages_per_slot=cfg.pages_per_slot, max_seq_len=cfg.max_seq_len,
             token_budget=cfg.token_budget,
             kv_reserve_tokens=self._reserve_tokens_cap(),
+            prefix_cache=self.prefix_cache, preemption=cfg.preemption,
+            aging_steps=cfg.aging_steps,
         )
         self.stats = ServerStats()
         self.results: dict[int, Request] = {}
@@ -187,21 +231,28 @@ class Server:
     # -- request intake ----------------------------------------------------
     def submit(self, prompt: Iterable[int], *, max_new_tokens: int = 32,
                sampling: SamplingParams = GREEDY,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None, priority: int = 0) -> Request:
         req = self.scheduler.submit(Request(
             prompt=[int(t) for t in prompt], max_new_tokens=max_new_tokens,
-            sampling=sampling, eos_id=eos_id,
+            sampling=sampling, eos_id=eos_id, priority=priority,
         ))
         req.t_submit = time.perf_counter()
         return req
 
     # -- the step loop -----------------------------------------------------
     def step(self) -> list[TokenEvent]:
-        """One scheduler iteration: admit, advance prefills one chunk each,
-        then one decode over all slots. Returns the tokens produced
-        (possibly empty while long prompts are still chunking in)."""
+        """One scheduler iteration: admit (mapping cached prefixes, possibly
+        preempting), advance prefills one chunk each, then one decode over
+        all slots. Returns the tokens produced (possibly empty while long
+        prompts are still chunking in)."""
         events: list[TokenEvent] = []
-        self.scheduler.admit()
+        for req in self.scheduler.admit(on_preempt=self._on_preempt):
+            self._install(req)
+        # The scheduler's counters are the single authority; stats mirrors
+        # them for reporting.
+        self.stats.prefix_hit_tokens = self.scheduler.prefix_hit_tokens
+        self.stats.prefix_prompt_tokens = self.scheduler.prefix_prompt_tokens
+        self.stats.preemptions = self.scheduler.preemptions
         for req in list(self.scheduler.running.values()):
             if req.prefilling:
                 self._prefill_advance(req, events)
@@ -255,6 +306,24 @@ class Server:
         for idx, page in grown:
             self.cache.set_page(req.slot, idx, page)
 
+    def _on_preempt(self, slot: int) -> None:
+        """Scheduler evicted this slot's request: NULL its device page-table
+        row (its pages may now belong to someone else or sit free)."""
+        self.cache.reset_slot(slot)
+
+    def _install(self, req: Request) -> None:
+        """Wire a freshly admitted request into the device state: mirror its
+        prefix-matched pages, run the copy-on-write page copies, and start
+        its committed length at the cached prefix."""
+        self._mirror_pages(req, list(enumerate(req.pages)))
+        for src, dst in req.pending_copies:
+            self.cache.pools = self._copy_page(
+                self.cache.pools, jnp.int32(src), jnp.int32(dst)
+            )
+            self.stats.cow_copies += 1
+        req.pending_copies = []
+        self.cache.seq_lens[req.slot] = req.prefilled
+
     def _recycle_window(self, req: Request) -> None:
         window = self.profile.kv_window
         if window is None:
@@ -266,13 +335,17 @@ class Server:
 
     def _prefill_advance(self, req: Request, events: list[TokenEvent]) -> None:
         """Run one prompt chunk for one slot: commit its K/V pages and
-        recurrent state row; on the final chunk, sample the first token."""
+        recurrent state row; on the final chunk, sample the first token.
+        A prefix-hit request starts at the first uncached position — its
+        chunk must gather the mapped pages' K/V back through the page
+        table, so it always takes the chunked step even when chunked
+        prefill is off (the suffix then runs as one bucketed chunk)."""
         cfg = self.config
         start = req.prefilled
         if cfg.prefill_chunk is None:
-            n = req.prompt_len
+            n = req.prompt_len - start
             tb = cfg.bucket(n)
-            prefill = self._prefill_full
+            prefill = self._prefill_chunk if start > 0 else self._prefill_full
         else:
             n = min(cfg.prefill_chunk, req.prompt_len - start)
             tb = cfg.prefill_chunk
@@ -295,6 +368,7 @@ class Server:
         self.cache.pools = pools
         req.prefilled += n
         self.cache.seq_lens[req.slot] = req.prefilled
+        self.scheduler.publish_prefix(req)
         self._recycle_window(req)
         self.stats.prefill_calls += 1
         self.stats.prefill_tokens += n

@@ -18,6 +18,8 @@ from repro.models import build
 from repro.serving import (
     FINISH_EOS,
     FINISH_LENGTH,
+    QUEUED,
+    RUNNING,
     OutOfPagesError,
     PagePool,
     Request,
@@ -26,6 +28,7 @@ from repro.serving import (
     Server,
     ServerConfig,
     generate_static,
+    prefix_block_hashes,
     sample_logits,
     stack_params,
 )
@@ -587,3 +590,379 @@ def test_sampling_mixed_rows():
         assert toks[0] == greedy
         seen.add(int(toks[1]))
     assert len(seen) > 1, "temperature row should vary across keys"
+
+
+# -- regression: four serving-layer bugs --------------------------------------
+
+def test_top_p_zero_is_greedy():
+    """top_p=0.0 must keep (exactly) the top token, not mask every logit.
+    Pre-fix, `(cum - probs) < 0.0` kept no column, the threshold became inf,
+    and the draw degenerated to uniform-random over the vocabulary."""
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    sp = stack_params([SamplingParams(temperature=1.0, top_p=0.0)] * 4)
+    for s in range(5):
+        toks = np.asarray(sample_logits(logits, jax.random.PRNGKey(s), **sp))
+        assert (toks == greedy).all(), "top_p=0.0 must be greedy"
+
+
+def test_finish_is_idempotent_after_slot_recycled():
+    """A duplicate finish() must be a no-op: pre-fix it deleted the slot's
+    NEW tenant from `running` and pushed a duplicate slot onto the free
+    list, silently making two later requests share one slot."""
+    sched = _scheduler(num_slots=1, max_seq_len=16)
+    a = sched.submit(Request(prompt=[1] * 4, max_new_tokens=2))
+    (a,) = sched.admit()
+    sched.ensure_pages(a, 4)
+    sched.finish(a)
+    b = sched.submit(Request(prompt=[2] * 4, max_new_tokens=2))
+    (b,) = sched.admit()
+    sched.ensure_pages(b, 4)
+    sched.finish(a)  # duplicate: must not evict b or free its slot/pages
+    assert sched.running.get(b.slot) is b
+    assert sched.num_free_slots == 0
+    assert sched.pool.num_held == 1  # b's page only
+    assert sched.completed == 1
+    # Finishing a request that never ran is an error, not silent corruption.
+    with pytest.raises(ValueError):
+        sched.finish(Request(prompt=[3]))
+
+
+def test_page_pool_refcount_double_decref_raises():
+    """The double-free guard holds through the refcount layer: decref below
+    zero raises instead of pushing a duplicate page onto the free list."""
+    pool = PagePool(num_pages=6, page_size=2)
+    (p,) = pool.alloc(1)
+    pool.incref([p])
+    pool.free([p])  # ref 2 -> 1: still held
+    assert pool.ref(p) == 1 and pool.num_held == 1
+    pool.free([p])  # ref 1 -> 0: freed
+    assert pool.ref(p) == 0 and pool.num_free == 5
+    with pytest.raises(ValueError):
+        pool.free([p])
+    assert pool.num_free == 5, "failed decref must not grow the free list"
+
+
+def test_rid_counter_is_per_scheduler():
+    """rids restart at 0 for every Scheduler (pre-fix: one module-global
+    counter made rids import-order- and test-order-dependent)."""
+    s1 = _scheduler()
+    s2 = _scheduler()
+    assert s1.submit(Request(prompt=[1, 2])).rid == 0
+    assert s1.submit(Request(prompt=[1, 2])).rid == 1
+    assert s2.submit(Request(prompt=[1, 2])).rid == 0
+
+
+def test_rid_counter_resets_with_server(served_model):
+    cfg, model, params = served_model
+    server = Server(model, params, ServerConfig(
+        num_slots=1, page_size=4, max_seq_len=16, prefill_bucket=8,
+    ))
+    assert server.submit([1, 2, 3], max_new_tokens=2).rid == 0
+    server.reset()
+    assert server.submit([1, 2, 3], max_new_tokens=2).rid == 0
+
+
+def test_server_config_default_is_none_sentinel():
+    """Server.__init__ must not bake one shared ServerConfig instance into
+    its signature (evaluated once at import time)."""
+    import inspect
+
+    default = inspect.signature(Server.__init__).parameters["config"].default
+    assert default is None
+
+
+# -- prefix cache: pool-level refcount/publish invariants ---------------------
+
+def test_page_pool_refcount_share_publish_invariants():
+    """Randomized alloc / incref / decref / publish / acquire interleavings
+    keep the pool's invariants: no page is both free and referenced,
+    num_free + num_held is conserved, shadow refcounts match, and a
+    published hash resolves until (and only until) its page is reused."""
+    rng = random.Random(99)
+    pool = PagePool(num_pages=13, page_size=4)
+    refs: dict[int, int] = {}  # shadow refcounts
+    published: dict[int, int] = {}  # shadow hash -> page
+    next_hash = iter(range(10**6, 10**7))
+
+    for _ in range(800):
+        op = rng.random()
+        if op < 0.30:
+            n = rng.randint(1, 3)
+            if n > pool.num_free:
+                with pytest.raises(OutOfPagesError):
+                    pool.alloc(n)
+            else:
+                for p in pool.alloc(n):
+                    refs[p] = 1
+                    # reuse overwrites contents: its index entry is evicted
+                    for h, q in list(published.items()):
+                        if q == p:
+                            del published[h]
+        elif op < 0.45 and refs:
+            p = rng.choice(list(refs))
+            pool.incref([p])
+            refs[p] += 1
+        elif op < 0.70 and refs:
+            p = rng.choice(list(refs))
+            pool.decref([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+        elif op < 0.85 and refs:
+            p = rng.choice(list(refs))
+            h = next(next_hash)
+            pool.publish(p, h)
+            for old, q in list(published.items()):
+                if q == p:
+                    del published[old]
+            published[h] = p
+        elif published:
+            h = rng.choice(list(published))
+            got = pool.acquire(h)
+            assert got == published[h]
+            refs[got] = refs.get(got, 0) + 1
+
+        # Invariants after every op.
+        assert pool.num_free + pool.num_held == pool.num_pages - 1
+        assert pool.num_held == len(refs)
+        for p, r in refs.items():
+            assert pool.ref(p) == r
+        for h, p in published.items():
+            assert pool.lookup(h) == p
+        held = set(refs)
+        free_count = pool.num_free
+        for p in range(1, pool.num_pages):
+            if p in held:
+                assert pool.ref(p) > 0
+            else:
+                free_count -= 1
+        assert free_count == 0, "every non-held page must be on the free list"
+
+    for p, r in list(refs.items()):
+        pool.decref([p] * r)
+    assert pool.num_free == pool.num_pages - 1 and pool.num_held == 0
+
+
+def test_prefix_block_hashes_chain():
+    """Block hashes are chained: equal hash means equal whole prefix."""
+    ps = 4
+    a = prefix_block_hashes([1, 2, 3, 4, 5, 6, 7, 8], ps)
+    b = prefix_block_hashes([1, 2, 3, 4, 5, 6, 7, 8, 9], ps)  # partial tail
+    c = prefix_block_hashes([9, 9, 9, 9, 5, 6, 7, 8], ps)
+    assert len(a) == 2 and a == b  # partial blocks are never hashed
+    assert a[0] != c[0]
+    assert a[1] != c[1], "same block after a different prefix must differ"
+
+
+# -- prefix cache: scheduler-level ---------------------------------------------
+
+def _prefill_to(sched, req, n):
+    """Simulate the server committing the first n prompt tokens."""
+    sched.ensure_pages(req, n)
+    req.prefilled = n
+    sched.publish_prefix(req)
+
+
+def test_admission_charges_only_uncached_suffix():
+    """With a published prefix resident, a request that shares it is
+    admitted where the uncached worst case would not fit."""
+    prompt = [7] * 12  # 3 full pages of 4; max_total 16 -> worst 4 pages
+
+    def run(prefix_cache):
+        pool = PagePool(num_pages=7, page_size=4)  # 6 allocatable
+        sched = Scheduler(num_slots=2, pool=pool, pages_per_slot=4,
+                          max_seq_len=16, prefix_cache=prefix_cache)
+        a = sched.submit(Request(prompt=list(prompt), max_new_tokens=4))
+        assert sched.admit() == [a]
+        _prefill_to(sched, a, 12)  # a holds 3 pages, 3 free, claims 1 more
+        b = sched.submit(Request(prompt=list(prompt), max_new_tokens=4))
+        return sched, a, b, sched.admit()
+
+    sched, a, b, admitted = run(prefix_cache=True)
+    # b shares 2 full pages + COWs the third: suffix charge is 2 pages.
+    assert admitted == [b]
+    assert b.cached_tokens == 11 and len(b.pending_copies) == 1
+    assert sched.pool.ref(a.pages[0]) == 2  # genuinely shared
+    assert sched.prefix_hit_tokens == 11
+
+    _, _, b2, admitted2 = run(prefix_cache=False)
+    assert admitted2 == []  # uncached worst case (4 pages) does not fit
+
+
+def test_priority_order_and_aging():
+    """Higher priority admits first; aging lifts a long-waiting request one
+    effective level per aging_steps failed passes, so it is not starved by
+    a stream of fresh higher-priority arrivals."""
+    sched = _scheduler(num_slots=1, max_seq_len=16, aging_steps=2)
+    lo = sched.submit(Request(prompt=[1] * 4, max_new_tokens=2, priority=0))
+    hi = sched.submit(Request(prompt=[2] * 4, max_new_tokens=2, priority=1))
+    assert sched.admit() == [hi], "higher priority must run first"
+    assert sched.admit() == [] and sched.admit() == []  # two failed passes
+    assert sched.effective_priority(lo) == 1  # 0 + age 2 // aging_steps 2
+    sched.finish(hi)
+    # A FRESH priority-1 arrival no longer outranks the aged lo (tie ->
+    # earlier rid wins); a fresh un-aged priority-0 request waits behind both.
+    hi2 = sched.submit(Request(prompt=[4] * 4, max_new_tokens=2, priority=1))
+    lo2 = sched.submit(Request(prompt=[3] * 4, max_new_tokens=2, priority=0))
+    assert sched.admit() == [lo]
+    sched.finish(lo)
+    assert sched.admit() == [hi2]
+    sched.finish(hi2)
+    assert sched.admit() == [lo2]
+
+
+def test_preemption_evicts_prefilling_lower_priority():
+    sched = _scheduler(num_slots=1, max_seq_len=16, preemption=True)
+    lo = sched.submit(Request(prompt=[1] * 8, max_new_tokens=4))
+    (lo,) = sched.admit()
+    _prefill_to(sched, lo, 4)  # mid-prefill: preemptible
+    hi = sched.submit(Request(prompt=[2] * 4, max_new_tokens=4, priority=3))
+    reset_slots = []
+    assert sched.admit(on_preempt=reset_slots.append) == [hi]
+    assert lo.status == QUEUED and lo.slot is None and lo.pages == []
+    assert lo.preemptions == 1 and sched.preemptions == 1
+    assert reset_slots == [hi.slot]
+    # A decoding request is never preempted: hi finishes prefill + decodes.
+    _prefill_to(sched, hi, 4)
+    assert hi.decoding
+    hi2 = sched.submit(Request(prompt=[3] * 4, max_new_tokens=4, priority=9))
+    assert sched.admit() == [] and hi2.status == QUEUED
+    assert sched.running.get(hi.slot) is hi
+
+
+def test_preemption_feasibility_no_pointless_eviction():
+    """A victim is only evicted when releasing every eligible victim could
+    actually admit the head — otherwise its committed prefill work would
+    be destroyed for nothing."""
+    sched = _scheduler(num_pages=5, page_size=4, num_slots=3, max_seq_len=16,
+                       preemption=True)
+    d = sched.submit(Request(prompt=[1] * 4, max_new_tokens=4))
+    (d,) = sched.admit()
+    _prefill_to(sched, d, 4)  # decoding: holds 1 page, reserves 1 more
+    lo = sched.submit(Request(prompt=[2] * 4, max_new_tokens=4))
+    (lo,) = sched.admit()
+    _prefill_to(sched, lo, 2)  # prefilling victim holding 1 page
+    # hi needs 4 pages; even with lo's page back only 3 are reachable
+    # (d's reservation stands), so lo must NOT be evicted.
+    hi = sched.submit(Request(prompt=[3] * 8, max_new_tokens=8, priority=5))
+    assert sched.admit() == [] and hi.status == QUEUED
+    assert lo.status == RUNNING and lo.preemptions == 0
+    assert sched.preemptions == 0
+
+
+# -- prefix cache: server-level parity ----------------------------------------
+
+def _static_ref(model, params, prompt, gen):
+    ref, _ = generate_static(
+        model, params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        max_new_tokens=gen,
+    )
+    return list(ref[0])
+
+
+def test_prefix_hit_parity_and_revival(served_model):
+    """A 100% prefix hit (same prompt resubmitted after the first finished —
+    its pages sit free-but-published and are revived) must replay the cold
+    request's exact greedy tokens."""
+    cfg, model, params = served_model
+    (prompt,) = _prompts(cfg, (13,), seed=31)
+    server = Server(model, params, ServerConfig(
+        num_slots=1, page_size=4, max_seq_len=32, prefill_chunk=4,
+        prefix_cache=True,
+    ))
+    a = server.submit(prompt, max_new_tokens=6)
+    server.run()
+    b = server.submit(prompt, max_new_tokens=6)
+    server.run()
+    ref = _static_ref(model, params, prompt, 6)
+    assert server.results[a.rid].out_tokens == ref
+    assert server.results[b.rid].out_tokens == ref
+    assert a.cached_tokens == 0 and b.cached_tokens == 12  # 3 of 4 pages
+    assert server.stats.prefix_hit_rate > 0
+    assert server.cache.allocator.num_held == 0
+
+
+def test_prefix_share_while_resident(served_model):
+    """Sharing against a still-running request: the shared pages' refcount
+    rises above one, the first owner's finish must not free them under the
+    second, and both token streams match static decode."""
+    cfg, model, params = served_model
+    (prompt,) = _prompts(cfg, (11,), seed=33)
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=4, max_seq_len=32, prefill_chunk=4,
+        prefix_cache=True,
+    ))
+    a = server.submit(prompt, max_new_tokens=3)
+    while a.status == QUEUED or a.prefilling:  # a may even finish in-step
+        server.step()
+    b = server.submit(prompt, max_new_tokens=8)  # shares a's live pages
+    server.run()
+    assert b.cached_tokens == 8
+    ref_a = _static_ref(model, params, prompt, 3)
+    ref_b = _static_ref(model, params, prompt, 8)
+    assert server.results[a.rid].out_tokens == ref_a
+    assert server.results[b.rid].out_tokens == ref_b
+    assert server.cache.allocator.num_held == 0
+
+
+def test_prefix_cow_on_page_aligned_prompt(served_model):
+    """A page-aligned fully-cached prompt forces copy-on-write: the last
+    matched block is copied so the recomputed final position's K/V never
+    touches the published page — and the index keeps serving later
+    requests from the original."""
+    cfg, model, params = served_model
+    (prompt,) = _prompts(cfg, (16,), seed=37)  # exactly 4 pages of 4
+    server = Server(model, params, ServerConfig(
+        num_slots=1, page_size=4, max_seq_len=32, prefill_chunk=4,
+        prefix_cache=True,
+    ))
+    reqs = [server.submit(prompt, max_new_tokens=6) for _ in range(3)]
+    server.run()
+    ref = _static_ref(model, params, prompt, 6)
+    for i, r in enumerate(reqs):
+        assert server.results[r.rid].out_tokens == ref, f"request {i}"
+    assert reqs[1].cached_tokens == 15 and reqs[2].cached_tokens == 15
+    assert server.stats.cow_copies >= 2
+    assert server.cache.allocator.num_held == 0
+
+
+def test_preempted_then_resumed_matches_static(served_model):
+    """A preempted-then-resumed request must produce the identical token
+    stream (its committed pages resume from the prefix index), and the
+    preempting high-priority request must too."""
+    cfg, model, params = served_model
+    long_p, short_p = _prompts(cfg, (24, 5), seed=41)
+    server = Server(model, params, ServerConfig(
+        num_slots=1, page_size=4, max_seq_len=40, prefill_chunk=4,
+        prefix_cache=True, preemption=True,
+    ))
+    lo = server.submit(long_p, max_new_tokens=6, priority=0)
+    server.step()  # lo admitted, one chunk committed
+    assert lo.prefilling
+    hi = server.submit(short_p, max_new_tokens=6, priority=5)
+    server.run()
+    assert server.stats.preemptions >= 1 and lo.preemptions >= 1
+    assert server.results[hi.rid].out_tokens == _static_ref(
+        model, params, short_p, 6)
+    assert server.results[lo.rid].out_tokens == _static_ref(
+        model, params, long_p, 6)
+    # The resume re-used lo's own committed chunk from the index.
+    assert lo.cached_tokens > 0
+    assert server.cache.allocator.num_held == 0
+
+
+def test_prefix_cache_disabled_for_recurrent_state():
+    """Models with recurrent state rows cannot skip prefill positions, so
+    the server must refuse to enable prefix caching for them."""
+    cfg = _fp32(get_config("recurrentgemma-2b", smoke=True))
+    model = build(cfg)
+    assert model.cb_profile().has_state_rows
+    server = Server(model, None, ServerConfig(
+        num_slots=1, page_size=4, max_seq_len=16, prefix_cache=True,
+    ))
+    assert not server.prefix_cache
+    assert not server.scheduler.prefix_cache
+    cfg_attn = _fp32(get_config("granite-3-8b", smoke=True))
+    assert not build(cfg_attn).cb_profile().has_state_rows
