@@ -58,3 +58,58 @@ class Rows:
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
+
+
+# Higher-is-better metrics the regression gate compares. A baseline row
+# gates only the fields it carries, so the committed baseline curates what
+# is load-bearing (throughput, utilization) and skips what is noise on a
+# shared CI runner (absolute microbench times).
+GATE_FIELDS = ("tok_s", "utilization")
+
+
+def load_rows_json(path: str) -> dict:
+    import json
+
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_rows(current: dict, baseline: dict, *, tolerance: float = 0.15,
+                 fields=GATE_FIELDS) -> list[str]:
+    """Regressions of ``current`` vs ``baseline`` (both ``Rows.to_json()``
+    docs). For every gate field a baseline row carries, the current run must
+    reach at least ``(1 - tolerance) *`` the baseline value; a baseline row
+    missing from the current run is itself a failure (comparability broke).
+    Returns human-readable failure strings, empty when the gate passes.
+    """
+    cur = {
+        r["name"]: r
+        for rs in current.get("sections", {}).values()
+        for r in rs
+    }
+    failures = []
+    for rs in baseline.get("sections", {}).values():
+        for base in rs:
+            gated = [f for f in fields if base.get(f) is not None]
+            if not gated:
+                continue
+            row = cur.get(base["name"])
+            if row is None:
+                failures.append(
+                    f"{base['name']}: row missing from the current run "
+                    f"(baseline gates {', '.join(gated)})"
+                )
+                continue
+            for f in gated:
+                got = row.get(f)
+                want = float(base[f])
+                floor = want * (1.0 - tolerance)
+                if got is None:
+                    failures.append(f"{base['name']}: field {f} missing "
+                                    f"(baseline {want:g})")
+                elif float(got) < floor:
+                    failures.append(
+                        f"{base['name']}: {f} {float(got):g} < "
+                        f"{floor:g} ({want:g} baseline - {tolerance:.0%})"
+                    )
+    return failures

@@ -30,6 +30,12 @@ def main(argv=None) -> None:
         help="write machine-readable rows (default: BENCH_smoke.json "
         "when --smoke is set)",
     )
+    ap.add_argument(
+        "--compare", default=None, metavar="BASELINE",
+        help="regression gate: fail when any tok_s/utilization field a "
+        "baseline row carries drops >15%% below the committed value "
+        "(benchmarks/baseline_smoke.json in CI)",
+    )
     args = ap.parse_args(argv)
 
     rows = Rows()
@@ -53,6 +59,17 @@ def main(argv=None) -> None:
             "smoke": args.smoke, "platform": jax.default_backend(),
         })
         print(f"# wrote {json_path}")
+    if args.compare:
+        from benchmarks.common import compare_rows, load_rows_json
+
+        failures = compare_rows(rows.to_json(), load_rows_json(args.compare))
+        if failures:
+            for f in failures:
+                print(f"# REGRESSION {f}")
+            raise SystemExit(
+                f"{len(failures)} bench regression(s) vs {args.compare}"
+            )
+        print(f"# bench gate passed vs {args.compare}")
 
 
 if __name__ == "__main__":

@@ -229,8 +229,46 @@ def _bench_prefix(rows: Rows, smoke: bool) -> dict:
     }
 
 
+def _bench_kernel_decode(rows: Rows, smoke: bool) -> dict:
+    """Continuous batching with the paged flash-decode kernel enabled.
+
+    On CPU CI the kernel runs in interpret mode, so the absolute tok/s is an
+    emulation number — the row anchors the *trajectory* (and the utilization
+    field, which is scheduling-determined and machine-independent); on a TPU
+    host the same section runs the compiled kernel via backend="pallas".
+    """
+    arch = "granite-3-8b"
+    n_requests = 4 if smoke else 8
+    backend = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    workload = _workload(n_requests, cfg.vocab_size)
+    max_seq = max(len(p) + g for p, g in workload)
+    server = Server(model, params, ServerConfig(
+        num_slots=2, page_size=8, max_seq_len=max_seq, prefill_bucket=8,
+        prefill_chunk=_PREFILL_CHUNK,
+    ), backend=backend)
+    server.warmup([len(p) for p, _ in workload])
+    for prompt, gen in workload:
+        server.submit(prompt, max_new_tokens=gen)
+    server.run()
+    s = server.stats
+    name = "serving/attention/kernel_decode"
+    rows.add(f"{name}/decode_tok_s", None, f"{s.decode_tok_s:.1f}",
+             tok_s=s.decode_tok_s, decode_steps=s.decode_steps, arch=arch,
+             backend=backend)
+    rows.add(f"{name}/utilization", None, f"{s.utilization:.3f}",
+             utilization=s.utilization, arch=arch, backend=backend)
+    return {
+        "arch": arch, "family": "kernel_decode", "backend": backend,
+        "cb_tok_s": s.decode_tok_s, "cb_util": s.utilization,
+    }
+
+
 def bench_serving(rows: Rows, smoke: bool = True) -> list[dict]:
     results = [_bench_arch(rows, arch, family, smoke) for arch, family in ARCHS]
+    results.append(_bench_kernel_decode(rows, smoke))
     prefix = _bench_prefix(rows, smoke)
     # CI gate: the shared-prefix workload must actually hit the cache (and
     # well past the break-even 50%) without perturbing results — parity is
@@ -247,12 +285,22 @@ def bench_serving(rows: Rows, smoke: bool = True) -> list[dict]:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable rows")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="fail on >15%% tok/s or utilization regression vs "
+                    "a committed baseline JSON")
     args = ap.parse_args(argv)
     rows = Rows()
     results = bench_serving(rows, smoke=args.smoke)
     print("name,us_per_call,derived")
     rows.emit()
     for res in results:
+        if res["family"] == "kernel_decode":
+            print(f"# [kernel_decode] paged flash-decode over "
+                  f"backend={res['backend']}: {res['cb_tok_s']:.1f} tok/s, "
+                  f"utilization {res['cb_util']:.0%}")
+            continue
         if res["family"] == "prefix":
             verdict = "confirmed" if res["ttft_speedup"] >= 1.0 else "NOT met"
             print(f"# [prefix] caching cuts TTFT: {verdict} "
@@ -267,6 +315,23 @@ def main(argv=None):
               f"utilization {res['cb_util']:.0%} vs {res['static_util']:.0%}, "
               f"ttft p50 {res['ttft_p50_ms']:.1f} ms / "
               f"p95 {res['ttft_p95_ms']:.1f} ms)")
+
+    if args.json:
+        rows.write_json(args.json, meta={
+            "smoke": args.smoke, "platform": jax.default_backend(),
+        })
+        print(f"# wrote {args.json}")
+    if args.compare:
+        from benchmarks.common import compare_rows, load_rows_json
+
+        failures = compare_rows(rows.to_json(), load_rows_json(args.compare))
+        if failures:
+            for f in failures:
+                print(f"# REGRESSION {f}")
+            raise SystemExit(
+                f"{len(failures)} bench regression(s) vs {args.compare}"
+            )
+        print(f"# bench gate passed vs {args.compare}")
 
 
 if __name__ == "__main__":

@@ -73,6 +73,184 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(pt_ref, len_ref, act_ref, q_ref, *refs,
+                         ppb: int, nblk: int, page_size: int, scale: float,
+                         window: int | None, softcap: float | None):
+    """One (slot, kv-head block, page block) program of the paged decode grid.
+
+    pt/len/act are scalar-prefetched (SMEM): the page table drives the K/V
+    BlockSpec index maps, so each program's DMA fetches exactly the physical
+    pages its slot owns — no host-side gather, no padded contiguous copy.
+    refs unpacks to [k_0..k_{ppb-1}, v_0..v_{ppb-1}, o, acc, m, l]: the same
+    pool array is bound ``ppb`` times with per-page index maps, which is how
+    a "block" spans multiple non-contiguous physical pages.
+    """
+    k_refs = refs[:ppb]
+    v_refs = refs[ppb:2 * ppb]
+    o_ref = refs[2 * ppb]
+    acc_ref, m_ref, l_ref = refs[2 * ppb + 1:]
+
+    slot = pl.program_id(0)
+    blk = pl.program_id(2)
+    _, hb, g, hd = q_ref.shape
+    rows = hb * g
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # The decoding position: the fresh key was written at q_len, so the
+    # attended window is positions [0, q_len] (gather path: lpos <= seq_len).
+    q_len = len_ref[slot]
+    slot_live = act_ref[slot] != 0
+    q = q_ref[0].astype(jnp.float32)  # (hb, G, hd)
+
+    for i in range(ppb):
+        logical = blk * ppb + i
+        base = logical * page_size
+        # Dead pages never touch the softmax state: inactive slots (free /
+        # mid chunked-prefill), NULL page-table entries (unallocated tails
+        # AND pages recycled out of a sliding window), and pages entirely
+        # past the decode position — the leftover/clock-gating idea applied
+        # to the page walk.
+        live = slot_live & (pt_ref[slot, logical] != 0) & (base <= q_len)
+        if window is not None:
+            live &= base + page_size - 1 > q_len - window
+
+        @pl.when(live)
+        def _compute(i=i, base=base):
+            # In-tile dequant: pools may store fp8 E4M3 — the cast to f32
+            # happens on the VMEM tile (the paper's fp8-storage /
+            # 16-bit-compute split, done at the kernel boundary).
+            k = k_refs[i][...].astype(jnp.float32)  # (page_size, hb, hd)
+            v = v_refs[i][...].astype(jnp.float32)
+            kt = jnp.transpose(k, (1, 0, 2))  # (hb, page_size, hd)
+            s = jax.lax.dot_general(
+                q, kt, (((2,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ) * scale  # (hb, G, page_size)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            pos = base + jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, page_size), 2
+            )
+            mask = pos <= q_len
+            if window is not None:
+                mask &= pos > q_len - window
+            s = jnp.where(mask, s, NEG_INF).reshape(rows, page_size)
+
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+            m_ref[...] = m_new
+            pv = jax.lax.dot_general(
+                p.reshape(hb, g, page_size), jnp.transpose(v, (1, 0, 2)),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )  # (hb, G, hd)
+            acc_ref[...] = acc_ref[...] * alpha + pv.reshape(rows, hd)
+
+    @pl.when(blk == nblk - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = out.reshape(hb, g, hd).astype(o_ref.dtype)
+
+
+def paged_flash_decode_pallas(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    page_size: int,
+    pages_per_block: int = 1,
+    head_block: int = 1,
+    window: int | None = None,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged flash-decode attention over the serving KV token pools.
+
+    q: (S, Hkv, G, hd) grouped queries — one token per slot, GQA groups on
+    their own axis (the same grouping rule ``_online_attention`` uses).
+    k_pool/v_pool: (num_pages * page_size, Hkv, hd) flat token pools, any
+    storage dtype (fp8 E4M3 pages dequantize in-tile). page_table: (S, P)
+    physical page ids in position order, NULL (0) for unallocated or
+    window-recycled entries. seq_lens: (S,) the decode position per slot.
+    active: (S,) which slots actually decode this step.
+
+    Grid: (slots, Hkv/head_block, P/pages_per_block) with the page axis
+    innermost; (m, l, acc) online-softmax state lives in VMEM scratch and
+    carries across page blocks, exactly like the prefill kernel carries it
+    across KV blocks. Returns (S, Hkv, G, hd) in q's dtype; inactive slots
+    return zeros (their logits are discarded by the server).
+    """
+    s, hkv, g, hd = q.shape
+    n_pages_tbl = page_table.shape[1]
+    ppb = max(1, min(pages_per_block, n_pages_tbl))
+    hb = max(1, min(head_block, hkv))
+    while hkv % hb:
+        hb -= 1
+    padded = -(-n_pages_tbl // ppb) * ppb
+    if padded != n_pages_tbl:
+        # NULL-pad the page-table tail: padded entries map to page 0 and are
+        # pl.when-skipped, so they cost a deduped null-page DMA at most.
+        page_table = jnp.pad(page_table, ((0, 0), (0, padded - n_pages_tbl)))
+    nblk = padded // ppb
+    grid = (s, hkv // hb, nblk)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, ppb=ppb, nblk=nblk, page_size=page_size,
+        scale=scale, window=window, softcap=softcap,
+    )
+
+    def kv_spec(i):
+        # Block index along the pool's token axis IS the physical page id:
+        # the index map reads it from the scalar-prefetched page table.
+        return pl.BlockSpec(
+            (page_size, hb, hd),
+            lambda si, h, b, pt, lens, act, i=i: (pt[si, b * ppb + i], h, 0),
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hb, g, hd),
+                         lambda si, h, b, pt, lens, act: (si, h, 0, 0)),
+            *[kv_spec(i) for i in range(ppb)],
+            *[kv_spec(i) for i in range(ppb)],
+        ],
+        out_specs=pl.BlockSpec((1, hb, g, hd),
+                               lambda si, h, b, pt, lens, act: (si, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hb * g, hd), jnp.float32),
+            pltpu.VMEM((hb * g, 1), jnp.float32),
+            pltpu.VMEM((hb * g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32),
+        seq_lens.astype(jnp.int32),
+        active.astype(jnp.int32),
+        q,
+        *([k_pool] * ppb),
+        *([v_pool] * ppb),
+    )
+
+
 def flash_attention_pallas(
     q: jnp.ndarray,
     k: jnp.ndarray,

@@ -313,6 +313,74 @@ def matmul(x, w, y=None, *, policy=FP32_REF, backend="xla", **kw):
     return gemm_op(x, w, y, gop=semiring.MATMUL, policy=policy, backend=backend, **kw)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    page_table: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    page_size: int,
+    window: int | None = None,
+    softcap: float | None = None,
+    pages_per_block: int | None = None,
+    head_block: int | None = None,
+    backend: str = "pallas_interpret",
+) -> jnp.ndarray:
+    """Fused paged flash-decode attention over the StateStore's flat KV pool.
+
+    q: (S, Hq, hd) — one fresh query token per slot; k_pool/v_pool:
+    (n_pages * page_size, Hkv, hd) physical pools (possibly fp8 storage,
+    dequantized in-tile); page_table: (S, pages_per_slot) int32 physical page
+    ids (0 = NULL); seq_lens: (S,) int32 position of the fresh token (keys at
+    positions <= seq_lens attend — the fresh key is written before attention
+    reads); active: (S,) slot-live mask. Returns (S, Hq, hd) in q.dtype;
+    inactive slots return zeros.
+
+    GQA reuses the grouping rule of `_online_attention`: q is reshaped to
+    (S, Hkv, G, hd) so KV pages are never materially repeated per q-head.
+    ``pages_per_block`` / ``head_block = None`` defers to the tuning layer.
+    """
+    from repro.kernels.flash_attention import paged_flash_decode_pallas
+
+    if backend not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"paged_decode_attention is a Pallas kernel; backend={backend!r}"
+            " has no paged path (the XLA gather reference lives in"
+            " models.attention)"
+        )
+    s, hq, hd = q.shape
+    hkv = k_pool.shape[1]
+    g = hq // hkv
+    requested = (pages_per_block, head_block)
+    concrete = not isinstance(q, jax.core.Tracer)
+    if (
+        concrete
+        and tuning.autotune_enabled()
+        and all(b is None for b in requested)
+    ):
+        ppb, hb = tuning.autotune_decode_attn(
+            q, k_pool, v_pool, page_table, seq_lens, active,
+            page_size=page_size, window=window, softcap=softcap,
+            backend=backend,
+        )
+    else:
+        ppb, hb = tuning.decode_attn_blocks(
+            pages_per_slot=page_table.shape[1], n_kv_heads=hkv,
+            page_size=page_size, head_dim=hd, storage_dtype=k_pool.dtype,
+            requested=requested,
+        )
+    qg = q.reshape(s, hkv, g, hd)
+    out = paged_flash_decode_pallas(
+        qg, k_pool, v_pool, page_table, seq_lens, active,
+        page_size=page_size, pages_per_block=ppb, head_block=hb,
+        window=window, softcap=softcap,
+        interpret=backend == "pallas_interpret",
+    )
+    return out.reshape(s, hq, hd)
+
+
 def flash_attention(q, k, v, *, causal=True, softcap=None, block_q=128,
                     block_k=128, backend="pallas_interpret"):
     """Fused attention entry point. q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd).

@@ -61,6 +61,31 @@ _CHUNK_HEURISTIC = {
 # VMEM budget for one grid step's working set (x, w, y/out, acc tiles).
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
+# Paged flash-decode attention: (pages_per_block, head_block) per storage
+# byte-width. pages_per_block is how many physical KV pages one grid step
+# walks (more pages per step = fewer grid steps but a bigger VMEM working
+# set); head_block tiles the KV-head axis. fp8 pages are 1 B/elem, so twice
+# the pages fit the same VMEM budget — the same rule as the GEMM K tile.
+_DECODE_ATTN_HEURISTIC = {
+    1: (8, 1),
+    2: (4, 1),
+    4: (4, 1),
+}
+# Candidate (pages_per_block, head_block) pairs swept by the decode-attn
+# autotuner (clamped/deduped per problem like the GEMM candidates).
+DECODE_ATTN_CANDIDATES = (
+    (1, 1),
+    (2, 1),
+    (4, 1),
+    (8, 1),
+    (16, 1),
+    (2, 2),
+    (4, 2),
+    (4, 4),
+)
+# VMEM budget for one decode-attn grid step (k+v pages, q, acc tiles).
+_DECODE_ATTN_VMEM_BYTES = 4 * 1024 * 1024
+
 # Candidate tilings swept by the autotuner (clamped/deduped per problem).
 AUTOTUNE_CANDIDATES = (
     (128, 128, 128),
@@ -285,3 +310,149 @@ def resolve_block_sizes(
 
 def autotune_enabled() -> bool:
     return os.environ.get("REPRO_AUTOTUNE", "") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode attention blocks
+# ---------------------------------------------------------------------------
+
+
+def _env_decode_attn() -> tuple[int | None, int | None]:
+    raw = os.environ.get("REPRO_DECODE_ATTN_BLOCKS", "")
+    if not raw:
+        return (None, None)
+    try:
+        parts = [int(p) for p in raw.split(",")]
+        if len(parts) != 2:
+            raise ValueError(raw)
+    except ValueError:
+        warnings.warn(
+            f"ignoring malformed REPRO_DECODE_ATTN_BLOCKS={raw!r} "
+            "(expected 'pages_per_block,head_block', e.g. '4,1'); "
+            "using the heuristic table",
+            stacklevel=3,
+        )
+        return (None, None)
+    return tuple(parts)  # type: ignore[return-value]
+
+
+def clamp_decode_attn_blocks(
+    ppb: int, hb: int, *, pages_per_slot: int, n_kv_heads: int,
+    page_size: int, head_dim: int, itemsize: int,
+) -> tuple[int, int]:
+    """Clamp a (pages_per_block, head_block) pair to the problem: head_block
+    must divide the KV-head count, pages_per_block never exceeds the page
+    table width, and the k+v working set stays inside the VMEM budget."""
+    ppb = max(1, min(ppb, pages_per_slot))
+    hb = max(1, min(hb, n_kv_heads))
+    while n_kv_heads % hb:
+        hb -= 1
+    while (
+        2 * ppb * page_size * hb * head_dim * itemsize > _DECODE_ATTN_VMEM_BYTES
+        and ppb > 1
+    ):
+        ppb //= 2
+    return ppb, hb
+
+
+def decode_attn_blocks(
+    *,
+    pages_per_slot: int,
+    n_kv_heads: int,
+    page_size: int,
+    head_dim: int,
+    storage_dtype,
+    requested: tuple[int | None, int | None] = (None, None),
+) -> tuple[int, int]:
+    """(pages_per_block, head_block) for the paged flash-decode kernel:
+    explicit args > ``REPRO_DECODE_ATTN_BLOCKS`` env override > byte-width
+    heuristic table, all problem-clamped (see the GEMM tables above —
+    same three-level policy)."""
+    itemsize = jnp.dtype(storage_dtype).itemsize
+    env = _env_decode_attn()
+    heur = _DECODE_ATTN_HEURISTIC.get(itemsize, (4, 1))
+    ppb, hb = (
+        req if req is not None else (ev if ev is not None else hv)
+        for req, ev, hv in zip(requested, env, heur)
+    )
+    return clamp_decode_attn_blocks(
+        ppb, hb, pages_per_slot=pages_per_slot, n_kv_heads=n_kv_heads,
+        page_size=page_size, head_dim=head_dim, itemsize=itemsize,
+    )
+
+
+def autotune_decode_attn(
+    q,
+    k_pool,
+    v_pool,
+    page_table,
+    seq_lens,
+    active,
+    *,
+    page_size: int,
+    window: int | None,
+    softcap: float | None,
+    backend: str,
+    cache_path: str | None = None,
+    candidates=DECODE_ATTN_CANDIDATES,
+    repeats: int = 3,
+) -> tuple[int, int]:
+    """Time each (pages_per_block, head_block) candidate on the real decode
+    operands; cache the winner to the same disk cache as the GEMM tiles.
+    Requires concrete arrays (call it outside jit)."""
+    import jax
+
+    from repro.kernels import ops as kernel_ops  # local: avoid import cycle
+
+    s, hq, hd = q.shape
+    hkv = k_pool.shape[1]
+    key = (
+        f"decode_attn/{backend}/{s}x{hq}x{hkv}x{hd}/"
+        f"ps{page_size}xP{page_table.shape[1]}/"
+        f"{jnp.dtype(k_pool.dtype).name}/w{window or 0}"
+    )
+    path = cache_path or default_cache_path()
+    cache = _load_cache(path)
+    if key in cache:
+        return tuple(cache[key])
+
+    itemsize = jnp.dtype(k_pool.dtype).itemsize
+    seen = set()
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        ppb, hb = clamp_decode_attn_blocks(
+            *cand, pages_per_slot=page_table.shape[1], n_kv_heads=hkv,
+            page_size=page_size, head_dim=hd, itemsize=itemsize,
+        )
+        if (ppb, hb) in seen:
+            continue
+        seen.add((ppb, hb))
+
+        def run():
+            return kernel_ops.paged_decode_attention(
+                q, k_pool, v_pool, page_table, seq_lens, active,
+                page_size=page_size, window=window, softcap=softcap,
+                pages_per_block=ppb, head_block=hb, backend=backend,
+            )
+
+        try:
+            jax.block_until_ready(run())  # compile + correctness smoke
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run())
+                ts.append(time.perf_counter() - t0)
+            t = min(ts)
+        except Exception:  # noqa: BLE001 — an invalid tiling just loses
+            continue
+        if t < best_t:
+            best, best_t = (ppb, hb), t
+
+    if best is None:
+        best = decode_attn_blocks(
+            pages_per_slot=page_table.shape[1], n_kv_heads=hkv,
+            page_size=page_size, head_dim=hd, storage_dtype=k_pool.dtype,
+        )
+    cache[key] = list(best)
+    _save_cache(path, cache)
+    return best

@@ -66,6 +66,13 @@ class PagedInfo(NamedTuple):
     chunked: trace-time constant marking a chunked-prefill step (read_idx
         set AND fresh k/v appended) — distinguishes it from decode, which
         also sets read_idx but attends over the gathered keys only.
+    pages: (B, pages_per_slot) physical page-table rows (NULL = 0), or None.
+        When set on a decode step and the engine backend is pallas, the
+        layer dispatches to the fused paged flash-decode kernel instead of
+        gathering through read_idx (the XLA gather path stays as the
+        reference oracle and CPU fallback).
+    page_size: tokens per physical page (trace-time constant; only
+        meaningful with ``pages``).
     """
 
     write_idx: jnp.ndarray
@@ -76,6 +83,8 @@ class PagedInfo(NamedTuple):
     lengths: jnp.ndarray | None = None
     active: jnp.ndarray | None = None
     chunked: bool = False
+    pages: jnp.ndarray | None = None
+    page_size: int = 0
 
 
 class AttnConfig(NamedTuple):
@@ -260,6 +269,7 @@ def apply(
         k, v, cross_pos = cross_kv
 
     new_cache = None
+    kernel_ctx = None
     if paged is not None and cache is not None and cross_kv is None:
         hkv, hd = cfg.n_kv_heads, cfg.head_dim
         ck = cache["kp"].at[paged.write_idx].set(
@@ -282,9 +292,30 @@ def apply(
                 [cv[paged.read_idx].astype(engine.policy.compute), v], axis=1
             )
         elif paged.read_idx is not None:
-            # Decode: gather every slot's pages in position order.
-            k = ck[paged.read_idx].astype(engine.policy.compute)
-            v = cv[paged.read_idx].astype(engine.policy.compute)
+            if (
+                paged.pages is not None
+                and s == 1
+                and paged.active is not None
+                and engine.backend in ("pallas", "pallas_interpret")
+            ):
+                # Decode via the fused paged flash-decode kernel: the page
+                # table is scalar-prefetched into the kernel, which walks
+                # exactly the pages each slot owns (fp8 pools dequantize
+                # in-tile). No gather, no padded contiguous copy.
+                from repro.kernels import ops as kernel_ops
+
+                kernel_ctx = kernel_ops.paged_decode_attention(
+                    q[:, 0], ck, cv,
+                    paged.pages, paged.starts, paged.active,
+                    page_size=paged.page_size,
+                    window=cfg.window, softcap=cfg.softcap,
+                    backend=engine.backend,
+                )[:, None]  # (B, 1, Hq, hd)
+            else:
+                # Decode: gather every slot's pages in position order
+                # (reference oracle / XLA-backend fallback).
+                k = ck[paged.read_idx].astype(engine.policy.compute)
+                v = cv[paged.read_idx].astype(engine.policy.compute)
         k_pos = paged.k_pos
     elif cache is not None and cross_kv is None:
         max_len = cache["k"].shape[1]
@@ -327,10 +358,13 @@ def apply(
     else:
         k_pos = positions
 
-    out = _online_attention(
-        q, k, v, positions, k_pos, cfg, engine,
-        causal=causal and cross_kv is None, mesh_ctx=mesh_ctx,
-    )
+    if kernel_ctx is not None:
+        out = kernel_ctx
+    else:
+        out = _online_attention(
+            q, k, v, positions, k_pos, cfg, engine,
+            causal=causal and cross_kv is None, mesh_ctx=mesh_ctx,
+        )
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
     out = common.dense_apply(params["o"], out, engine)
     return out, new_cache

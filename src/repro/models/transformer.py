@@ -659,7 +659,7 @@ class Transformer:
         paged = attention.PagedInfo(
             write_idx=write_idx, read_idx=read_idx, k_pos=k_pos,
             slots=jnp.arange(n_slots, dtype=jnp.int32), starts=seq_lens,
-            active=active,
+            active=active, pages=page_table, page_size=page_size,
         )
         x = self.embed(params, tokens, engine=eng)
         x, new_pools, _ = self._run_stack(

@@ -138,7 +138,15 @@ class ServerStats:
 
 
 class Server:
-    """Continuous-batching inference server over the serving StateStore."""
+    """Continuous-batching inference server over the serving StateStore.
+
+    ``backend`` selects the engine's kernel backend for every GEMM *and* the
+    decode attention path: with ``"pallas"`` / ``"pallas_interpret"``,
+    one-token decode steps dispatch to the fused paged flash-decode kernel
+    (page-table walk inside the kernel, in-tile fp8 dequant); the default
+    XLA backend keeps the gather + online-softmax reference path, which is
+    also the CPU fallback and the parity oracle the kernel is tested against.
+    """
 
     def __init__(self, model, params, config: Optional[ServerConfig] = None, *,
                  engine=None, backend: Optional[str] = None, seed: int = 0):

@@ -1,0 +1,83 @@
+"""The bench regression gate (benchmarks/common.py compare_rows).
+
+The gate guards the serving-smoke CI job: a >15% drop on any tok_s /
+utilization field the committed baseline carries must fail, everything else
+(extra rows, non-gated fields, faster runs) must pass. Loaded by path so the
+tier-1 invocation (PYTHONPATH=src) needs no repo-root import hack.
+"""
+import importlib.util
+import pathlib
+
+spec = importlib.util.spec_from_file_location(
+    "bench_common",
+    pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "common.py",
+)
+bench_common = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_common)
+compare_rows = bench_common.compare_rows
+
+
+def _doc(rows):
+    return {"sections": {"serving": rows}}
+
+
+BASELINE = _doc([
+    {"name": "serving/a/decode_tok_s", "tok_s": 100.0},
+    {"name": "serving/a/utilization", "utilization": 0.8},
+    {"name": "serving/a/ttft_ms", "ttft_p50_ms": 12.0},  # not a gate field
+])
+
+
+def test_gate_passes_at_and_above_floor():
+    cur = _doc([
+        {"name": "serving/a/decode_tok_s", "tok_s": 85.0},  # exactly -15%
+        {"name": "serving/a/utilization", "utilization": 0.9},
+        {"name": "serving/extra/row", "tok_s": 1.0},  # extra rows ignored
+    ])
+    assert compare_rows(cur, BASELINE) == []
+
+
+def test_gate_fails_below_tolerance():
+    cur = _doc([
+        {"name": "serving/a/decode_tok_s", "tok_s": 84.0},
+        {"name": "serving/a/utilization", "utilization": 0.5},
+    ])
+    failures = compare_rows(cur, BASELINE)
+    assert len(failures) == 2
+    assert any("decode_tok_s" in f and "84" in f for f in failures)
+    assert any("utilization" in f for f in failures)
+
+
+def test_gate_fails_on_missing_row_or_field():
+    cur = _doc([
+        {"name": "serving/a/decode_tok_s", "derived": "n/a"},  # field gone
+    ])
+    failures = compare_rows(cur, BASELINE)
+    # tok_s field missing + utilization row missing; the ungated ttft row
+    # must not be required at all.
+    assert len(failures) == 2
+    assert not any("ttft" in f for f in failures)
+
+
+def test_gate_tolerance_knob():
+    cur = _doc([
+        {"name": "serving/a/decode_tok_s", "tok_s": 51.0},
+        {"name": "serving/a/utilization", "utilization": 0.41},
+    ])
+    assert compare_rows(cur, BASELINE, tolerance=0.5) == []
+    assert len(compare_rows(cur, BASELINE, tolerance=0.1)) == 2
+
+
+def test_committed_baseline_is_well_formed():
+    """The checked-in baseline must parse and gate at least the kernel-decode
+    throughput row (the PR 6 anchor point)."""
+    base = bench_common.load_rows_json(
+        str(pathlib.Path(__file__).resolve().parents[1]
+            / "benchmarks" / "baseline_smoke.json")
+    )
+    rows = [r for rs in base["sections"].values() for r in rs]
+    gated = {r["name"] for r in rows
+             if any(r.get(f) is not None for f in bench_common.GATE_FIELDS)}
+    assert "serving/attention/kernel_decode/decode_tok_s" in gated
+    # An empty current run must fail on every gated row.
+    assert len(compare_rows(_doc([]), base)) == len(gated)
