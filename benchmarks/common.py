@@ -64,7 +64,7 @@ class Rows:
 # gates only the fields it carries, so the committed baseline curates what
 # is load-bearing (throughput, utilization) and skips what is noise on a
 # shared CI runner (absolute microbench times).
-GATE_FIELDS = ("tok_s", "utilization")
+GATE_FIELDS = ("tok_s", "utilization", "acceptance_rate")
 
 
 def load_rows_json(path: str) -> dict:

@@ -47,10 +47,23 @@ _SKINNY_HEURISTIC = {
     2: (512, 128),
     4: (512, 128),
 }
+# Speculative-verify GEMMs live exactly at the seam between the skinny
+# decode table and the chunk table: M = k+1 verify positions (2..16 for
+# draft depths 1..15). Like decode rows they clamp block_m to M exactly —
+# rounding M=9..16 up to an fp8 sublane (32) would spend most of the tile
+# on padding — with a K tile between the skinny and chunk depths.
+_VERIFY_M = 16
+# (bk, bn) per storage byte-width for the verify-M table.
+_VERIFY_HEURISTIC = {
+    1: (768, 128),
+    2: (384, 128),
+    4: (384, 128),
+}
 # Chunked-prefill GEMMs sit between decode and training: M = chunk size
 # (16/32/64 tokens). The M tile rounds the chunk up to the sublane grid
 # (never a full 128 training tile) and, like the skinny table, spends the
-# spare VMEM on a deeper K tile.
+# spare VMEM on a deeper K tile. (M <= _VERIFY_M is claimed by the verify
+# table above, so in practice this covers (16, 64].)
 _CHUNK_M = 64
 # (bk, bn) per storage byte-width for the chunk-M prefill table.
 _CHUNK_HEURISTIC = {
@@ -107,6 +120,13 @@ AUTOTUNE_CANDIDATES = (
     (16, 128, 512),
     (32, 128, 256),
     (64, 128, 256),
+    # Speculative-verify rows (M = k+1 for draft depth k): exact-M tiles at
+    # the skinny/chunk seam, swept at the verify table's K depths.
+    (3, 128, 512),
+    (5, 128, 512),
+    (9, 128, 384),
+    (12, 128, 384),
+    (16, 128, 384),
 )
 
 
@@ -162,6 +182,17 @@ def heuristic_block_sizes(
         # mode accepts sub-sublane tiles, real-TPU re-tunes override this
         # via the autotune cache). K tile deepens into the freed VMEM.
         bk, bn = _SKINNY_HEURISTIC.get(itemsize, (512, 128))
+        bm = m
+        while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
+            bk //= 2
+        _, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+        return bm, _ceil_to(bn, LANE), _ceil_to(bk, sub)
+    if m <= _VERIFY_M:
+        # Speculative-verify table: block_m == M exactly (same sub-sublane
+        # rationale as the skinny table — a verify row is k+1 real tokens,
+        # and a 32-row fp8 tile would be half padding at k=15), with a K
+        # tile between the skinny and chunk depths.
+        bk, bn = _VERIFY_HEURISTIC.get(itemsize, (384, 128))
         bm = m
         while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
             bk //= 2

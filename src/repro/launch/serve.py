@@ -25,7 +25,13 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build
-from repro.serving import SamplingParams, Server, ServerConfig, generate_static
+from repro.serving import (
+    SamplingParams,
+    Server,
+    ServerConfig,
+    SpecConfig,
+    generate_static,
+)
 
 
 def mixed_prompt_lens(base: int, n: int) -> list[int]:
@@ -63,6 +69,25 @@ def main(argv=None):
                          "the workload then submits the second half of the "
                          "requests at priority+5 after the first half has "
                          "started prefilling, so preemption actually fires")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per decode "
+                         "round and verify them in one target pass "
+                         "(0 = off). Without --draft-model the drafter is "
+                         "n-gram prompt-lookup (no extra model)")
+    ap.add_argument("--draft-model", choices=ARCH_IDS, default=None,
+                    help="decoder-only zoo config to run as the draft "
+                         "model (own StateStore; vocab must match the "
+                         "target). Implies --spec-k 4 if unset")
+    ap.add_argument("--spec-ngram", type=int, default=3, metavar="N",
+                    help="max n-gram order for prompt-lookup self-drafting")
+    ap.add_argument("--spec-gate", action="store_true",
+                    help="CI gate: assert greedy speculative output matches "
+                         "a non-speculative run token-for-token, and that "
+                         "the acceptance rate is > 0 (for a model drafter "
+                         "under greedy the acceptance check runs a "
+                         "temperature-1.0 pass — two random-init models "
+                         "share no greedy attractor, so greedy acceptance "
+                         "is structurally ~0 there)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -91,6 +116,21 @@ def main(argv=None):
               "falling back to static-batch serving")
         mode = "static"
 
+    spec = None
+    draft_model = draft_params = None
+    if args.draft_model is not None or args.spec_k > 0:
+        if mode == "static":
+            print("note: speculative decoding rides the continuous server; "
+                  "--spec-k/--draft-model are inert under static mode")
+        else:
+            spec = SpecConfig(k=args.spec_k or 4, ngram_n=args.spec_ngram)
+            if args.draft_model is not None:
+                dcfg = get_config(args.draft_model, smoke=args.smoke)
+                draft_model = build(dcfg)
+                draft_params = draft_model.init(
+                    jax.random.PRNGKey(args.seed + 1)
+                )
+
     if mode == "static":
         tokens = rng.integers(
             0, cfg.vocab_size, size=(args.requests, args.prompt_len)
@@ -114,6 +154,15 @@ def main(argv=None):
         sys_prompt = list(rng.integers(0, cfg.vocab_size, size=args.prompt_len))
         prompts = [sys_prompt + list(rng.integers(0, cfg.vocab_size, size=ln))
                    for ln in lens]
+    elif spec is not None and args.draft_model is None:
+        # Repeated-motif prompts: the traffic shape prompt-lookup
+        # self-drafting feeds on (a purely random prompt has no repeated
+        # n-gram until the greedy chain falls into a loop).
+        prompts = []
+        for ln in lens:
+            motif = list(rng.integers(0, cfg.vocab_size,
+                                      size=max(2, ln // 3)))
+            prompts.append((motif * 3)[: max(ln, 6)])
     else:
         prompts = [list(rng.integers(0, cfg.vocab_size, size=ln))
                    for ln in lens]
@@ -127,7 +176,8 @@ def main(argv=None):
             prefill_chunk=args.chunked_prefill or None,
             prefix_cache=args.prefix_cache, preemption=args.preempt,
         ),
-        engine=eng, seed=args.seed,
+        engine=eng, seed=args.seed, spec=spec,
+        draft_model=draft_model, draft_params=draft_params,
     )
     prof = server.profile
     print(f"state store: {server.cache.allocator.num_pages} pages x "
@@ -177,11 +227,59 @@ def main(argv=None):
               f"tokens), {s.cow_copies} cow copies")
     if args.preempt:
         print(f"preemptions: {s.preemptions}")
+    if spec is not None:
+        drafter = (f"model:{args.draft_model}" if args.draft_model
+                   else f"ngram(n={spec.ngram_n})")
+        print(f"speculative: k={spec.k} drafter={drafter} "
+              f"acceptance {s.acceptance_rate:.0%} "
+              f"({s.spec_accepted}/{s.spec_drafted} drafts), "
+              f"{s.accepted_per_step:.2f} accepted/step "
+              f"over {s.spec_steps} rounds")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}: prompt {r.prompt_len:>3} -> "
               f"{r.num_generated} tokens ({r.finish_reason}): "
               f"{r.out_tokens}")
+
+    if spec is not None and args.spec_gate:
+        failures = []
+        if args.temperature <= 0:
+            ref = Server(model, params, server.config, engine=eng,
+                         seed=args.seed)
+            for p in prompts:
+                ref.submit(p, max_new_tokens=args.max_new, sampling=sampling,
+                           priority=args.priority)
+            ref_results = ref.run()
+            spec_outs = [results[rid].out_tokens for rid in sorted(results)]
+            ref_outs = [ref_results[rid].out_tokens
+                        for rid in sorted(ref_results)]
+            if spec_outs != ref_outs:
+                failures.append("greedy speculative output diverges from "
+                                "the non-speculative run")
+            else:
+                print("spec gate: greedy parity vs non-speculative decode "
+                      "confirmed")
+        acc = s.acceptance_rate
+        if args.draft_model is not None and args.temperature <= 0:
+            # Two random-init models share no greedy attractor, so greedy
+            # model-drafter acceptance is structurally ~0; the meaningful
+            # acceptance check for this pairing is a sampled pass (the
+            # near-uniform logits of target and drafter overlap heavily).
+            server.reset()
+            sampled = SamplingParams(1.0, 0, 1.0)
+            for p in prompts:
+                server.submit(p, max_new_tokens=args.max_new,
+                              sampling=sampled)
+            server.run()
+            acc = server.stats.acceptance_rate
+            print(f"spec gate: temperature-1.0 acceptance {acc:.0%} "
+                  f"({server.stats.spec_accepted}/"
+                  f"{server.stats.spec_drafted} drafts)")
+        if acc <= 0.0:
+            failures.append("speculative acceptance rate is 0")
+        if failures:
+            raise SystemExit("spec gate FAILED: " + "; ".join(failures))
+        print("spec gate passed")
 
 
 if __name__ == "__main__":

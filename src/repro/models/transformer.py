@@ -670,6 +670,65 @@ class Transformer:
         logits = self.logits(params, x, engine=eng)
         return logits[:, 0], new_pools
 
+    def verify_cb(self, params, tokens, pools, page_table, seq_lens, lengths,
+                  active, *, page_size: int, commit: bool,
+                  engine: Engine | None = None):
+        """Slot-batched multi-token verify step for speculative decoding.
+
+        tokens: (S, T) per-slot rows [last committed token, draft_1..draft_k]
+        right-padded; page_table: (S, P); seq_lens: (S,) tokens already
+        committed per slot (= the first fresh position); lengths: (S,) valid
+        tokens per row (0 for rows sitting this round out); active: (S,)
+        rows taking part. Structurally this is ``prefill_cb``'s chunked path
+        lifted to all slots at once — gather the committed K/V back through
+        the page table, append the fresh row, attend causally — except
+        logits come back for EVERY position (S, T, V): logits[:, i] is the
+        target distribution after token i, which is what judges draft i+1.
+
+        ``commit`` (trace-time) gates recurrent state-row commits. The
+        verify pass runs with commit=False: the accepted prefix is not known
+        yet, so state rows must stay at the pre-step boundary; the server
+        then re-runs the same step with commit=True and ``lengths`` clamped
+        to accepted+1, re-scanning exactly the accepted tokens into the
+        rows (K/V rewrites are bit-identical). K/V needs no such second
+        thought in the commit=False pass — writes past the boundary the
+        host later refuses to advance ``seq_lens`` over are never read back
+        as valid, so rejected drafts roll back for free.
+        """
+        eng = as_engine(engine) if engine is not None else self.engine
+        n_slots, t = tokens.shape
+        tok = jnp.arange(t, dtype=jnp.int32)
+        pos = seq_lens[:, None] + tok[None, :]  # (S, T)
+        valid = (tok[None, :] < lengths[:, None]) & active[:, None]
+        page_idx = jnp.clip(pos // page_size, 0, page_table.shape[1] - 1)
+        page = jnp.take_along_axis(page_table, page_idx, axis=1)
+        write_idx = jnp.where(
+            valid, page * page_size + pos % page_size, 0
+        ).reshape(n_slots * t)
+        fresh_pos = jnp.where(valid, pos, attention.POS_SENTINEL)
+        n_tok = page_table.shape[1] * page_size
+        read_idx = (
+            page_table[:, :, None] * page_size
+            + jnp.arange(page_size, dtype=jnp.int32)[None, None, :]
+        ).reshape(n_slots, n_tok)
+        lpos = jnp.arange(n_tok, dtype=jnp.int32)[None]
+        read_pos = jnp.where(lpos < seq_lens[:, None], lpos, attention.POS_SENTINEL)
+        k_pos = jnp.concatenate([read_pos, fresh_pos], axis=1)
+        paged = attention.PagedInfo(
+            write_idx=write_idx, read_idx=read_idx, k_pos=k_pos,
+            slots=jnp.arange(n_slots, dtype=jnp.int32), starts=seq_lens,
+            lengths=lengths,
+            active=active if commit else jnp.zeros_like(active),
+            chunked=True,
+        )
+        x = self.embed(params, tokens, engine=eng)
+        x, new_pools, _ = self._run_stack(
+            params["decoder"], x, pos, eng, cache=pools, paged=paged
+        )
+        x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
+        logits = self.logits(params, x, engine=eng)
+        return logits, new_pools
+
     def prefill(self, params, batch, cache, *, engine: Engine | None = None):
         """Run the prompt through the decoder, filling caches."""
         cfg = self.cfg

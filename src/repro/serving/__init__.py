@@ -28,7 +28,13 @@ from repro.serving.cache import (
     copy_kv_page,
     prefix_block_hashes,
 )
-from repro.serving.sampling import GREEDY, SamplingParams, sample_logits, stack_params
+from repro.serving.sampling import (
+    GREEDY,
+    SamplingParams,
+    filter_logits,
+    sample_logits,
+    stack_params,
+)
 from repro.serving.scheduler import (
     FINISH_EOS,
     FINISH_LENGTH,
@@ -46,13 +52,22 @@ from repro.serving.server import (
     TokenEvent,
     generate_static,
 )
+from repro.serving.spec import (
+    ModelDrafter,
+    NgramDrafter,
+    SpecConfig,
+    Verifier,
+    speculative_sample,
+)
 
 __all__ = [
     "FINISH_EOS",
     "FINISH_LENGTH",
     "FINISHED",
     "GREEDY",
+    "ModelDrafter",
     "NULL_PAGE",
+    "NgramDrafter",
     "OutOfPagesError",
     "PagePool",
     "PagedKVCache",
@@ -64,12 +79,16 @@ __all__ = [
     "Server",
     "ServerConfig",
     "ServerStats",
+    "SpecConfig",
     "StateStore",
     "StaticStats",
     "TokenEvent",
+    "Verifier",
     "copy_kv_page",
+    "filter_logits",
     "generate_static",
     "prefix_block_hashes",
     "sample_logits",
+    "speculative_sample",
     "stack_params",
 ]

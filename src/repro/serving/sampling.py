@@ -36,16 +36,16 @@ def stack_params(params_list) -> dict[str, np.ndarray]:
     }
 
 
-def sample_logits(logits, key, temperature, top_k, top_p):
-    """Sample one token per row. logits: (S, V); parameters: (S,) arrays.
-
-    Rows with temperature <= 0 take the argmax; the random draw still
-    happens for every row (fixed shape) and is discarded there.
+def filter_logits(logits, temperature, top_k, top_p):
+    """The sampler's distribution transform, factored out so speculative
+    rejection sampling (serving/spec) can build the *same* filtered
+    target/drafter distributions the non-speculative sampler draws from.
+    logits: (S, V); parameters: (S,) arrays. Returns temperature-scaled
+    logits with filtered entries at NEG_INF; ``softmax`` of the result is
+    the distribution ``sample_logits`` samples when temperature > 0.
     """
     v = logits.shape[-1]
     logits = logits.astype(jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1)
-
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
     # top-k: drop everything below the k-th largest logit (ties survive).
     sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
@@ -65,7 +65,17 @@ def sample_logits(logits, key, temperature, top_k, top_p):
     thresh = jnp.min(
         jnp.where(keep, sorted_desc, jnp.inf), axis=-1, keepdims=True
     )
-    scaled = jnp.where(scaled < thresh, NEG_INF, scaled)
+    return jnp.where(scaled < thresh, NEG_INF, scaled)
 
+
+def sample_logits(logits, key, temperature, top_k, top_p):
+    """Sample one token per row. logits: (S, V); parameters: (S,) arrays.
+
+    Rows with temperature <= 0 take the argmax; the random draw still
+    happens for every row (fixed shape) and is discarded there.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = filter_logits(logits, temperature, top_k, top_p)
     sampled = jax.random.categorical(key, scaled, axis=-1)
     return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)

@@ -81,6 +81,11 @@ class Request:
     # Higher runs first; FIFO within a level. Aging (see Scheduler) keeps
     # low-priority requests from starving.
     priority: int = 0
+    # Per-request draft-depth override for speculative decoding: None takes
+    # the server's SpecConfig.k; a smaller value limits how many drafts
+    # this request fields per round (it can lower k, never raise it — the
+    # verify step's shape is sized for the configured k).
+    spec_k: Optional[int] = None
     # Assigned by Scheduler.submit (per-scheduler counter: a fresh server
     # always starts at rid 0, independent of import or test order).
     rid: Optional[int] = None

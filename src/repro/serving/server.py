@@ -43,6 +43,13 @@ from repro.serving.sampling import (
     stack_params,
 )
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.spec import (
+    ModelDrafter,
+    NgramDrafter,
+    SpecConfig,
+    Verifier,
+    effective_k,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +121,34 @@ class ServerStats:
     prefix_prompt_tokens: int = 0
     cow_copies: int = 0  # copy-on-write page copies performed
     preemptions: int = 0  # prefilling requests evicted back to the queue
+    # Speculative decoding: verify rounds run, drafts fielded, drafts the
+    # rejection sampler accepted.
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     @property
     def utilization(self) -> float:
         """Fraction of offered decode-lane steps that produced a token —
-        the serving analogue of the paper's CE-array utilization."""
+        the serving analogue of the paper's CE-array utilization. Under
+        speculative decoding one lane-step can emit several tokens, so
+        this can exceed 1.0 — that surplus IS the speedup."""
         return self.decode_tokens / self.slot_steps if self.slot_steps else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of fielded draft tokens the target accepted."""
+        if not self.spec_drafted:
+            return 0.0
+        return self.spec_accepted / self.spec_drafted
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean accepted draft tokens per speculative verify round (the
+        emitted tokens per round are this + 1)."""
+        if not self.spec_steps:
+            return 0.0
+        return self.spec_accepted / self.spec_steps
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -149,7 +178,9 @@ class Server:
     """
 
     def __init__(self, model, params, config: Optional[ServerConfig] = None, *,
-                 engine=None, backend: Optional[str] = None, seed: int = 0):
+                 engine=None, backend: Optional[str] = None, seed: int = 0,
+                 spec: Optional[SpecConfig] = None, draft_model=None,
+                 draft_params=None):
         # None sentinel, NOT a default instance: a module-level default
         # would be one shared object evaluated at import time, bleeding any
         # mutation between servers.
@@ -184,6 +215,32 @@ class Server:
         self._copy_page = jax.jit(
             lambda pools, src, dst: copy_kv_page(pools, src, dst, page_size=ps)
         )
+        # Speculative decoding: a drafter (paired model with its own
+        # StateStore, or n-gram self-drafting) + the target-side verifier.
+        # Passing draft_model without spec enables it at the default k.
+        if draft_model is not None and spec is None:
+            spec = SpecConfig()
+        self.spec = spec
+        self.drafter = None
+        self.verifier = None
+        if spec is not None:
+            if draft_model is not None:
+                if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                    raise ValueError(
+                        "drafter and target must share a vocabulary: "
+                        f"{draft_model.cfg.vocab_size} != {model.cfg.vocab_size}"
+                    )
+                self.drafter = ModelDrafter(
+                    draft_model, draft_params, num_slots=config.num_slots,
+                    page_size=config.page_size, max_seq_len=config.max_seq_len,
+                    k=spec.k, draft_chunk=spec.draft_chunk, backend=backend,
+                )
+            else:
+                self.drafter = NgramDrafter(k=spec.k, ngram_n=spec.ngram_n)
+            self.verifier = Verifier(
+                model, page_size=config.page_size, engine=engine,
+                backend=backend,
+            )
         self._fresh_state()
 
     # -- pool sizing -------------------------------------------------------
@@ -230,6 +287,8 @@ class Server:
         self.stats = ServerStats()
         self.results: dict[int, Request] = {}
         self._key = jax.random.PRNGKey(self.seed)
+        if getattr(self, "drafter", None) is not None:
+            self.drafter.reset()
 
     def reset(self) -> None:
         """Drop all serving state (keeps compiled steps and the pools —
@@ -239,10 +298,12 @@ class Server:
     # -- request intake ----------------------------------------------------
     def submit(self, prompt: Iterable[int], *, max_new_tokens: int = 32,
                sampling: SamplingParams = GREEDY,
-               eos_id: Optional[int] = None, priority: int = 0) -> Request:
+               eos_id: Optional[int] = None, priority: int = 0,
+               spec_k: Optional[int] = None) -> Request:
         req = self.scheduler.submit(Request(
             prompt=[int(t) for t in prompt], max_new_tokens=max_new_tokens,
             sampling=sampling, eos_id=eos_id, priority=priority,
+            spec_k=spec_k,
         ))
         req.t_submit = time.perf_counter()
         return req
@@ -265,7 +326,10 @@ class Server:
             if req.prefilling:
                 self._prefill_advance(req, events)
         if any(r.decoding for r in self.scheduler.running.values()):
-            self._decode_once(events)
+            if self.spec is not None:
+                self._spec_decode_once(events)
+            else:
+                self._decode_once(events)
         return events
 
     def run(self) -> dict[int, Request]:
@@ -420,6 +484,97 @@ class Server:
             self._recycle_window(req)
             self._commit(req, int(toks[slot]), events)
 
+    def _spec_decode_once(self, events: list[TokenEvent]) -> None:
+        """One speculative round over every decoding slot: draft k, verify
+        all k+1 positions in one fixed-shape step, rejection-sample, then
+        commit the accepted prefix + one target token per row.
+
+        Rollback is asymmetric by design. Target K/V written past the
+        accepted boundary needs no undo — ``seq_lens`` simply doesn't
+        advance over it, so it is never read back and the next round
+        overwrites it. Target recurrent state rows get a second
+        ``commit_state`` pass clamped to accepted+1. The drafter rolls
+        itself back internally (pool snapshot), so its next-round replay
+        sees only tokens the target really emitted."""
+        spec = self.spec
+        decoding = [(slot, req) for slot, req in self.scheduler.running.items()
+                    if req.decoding]
+        n = self.cache.num_slots
+        width = spec.k + 1
+        want = np.zeros((n,), np.int32)
+        active = np.zeros((n,), bool)
+        contexts: dict[int, list[int]] = {}
+        params_list = [GREEDY] * n
+        for slot, req in decoding:
+            committed = int(self.cache.seq_lens[slot])
+            remaining = min(
+                req.max_new_tokens - req.num_generated,
+                req.max_total - req.prompt_len - req.num_generated,
+            )
+            want[slot] = effective_k(
+                spec.k if req.spec_k is None else req.spec_k,
+                spec.k, remaining, req.max_total - 1 - committed,
+            )
+            active[slot] = True
+            contexts[slot] = req.prompt + req.out_tokens
+            params_list[slot] = req.sampling
+        t0 = time.perf_counter()
+        proposal = self.drafter.propose(
+            contexts, want, self._next_key(), params_list,
+        )
+        k_eff = np.minimum(want, proposal.counts)
+        lengths = np.where(active, k_eff + 1, 0).astype(np.int32)
+        tokens = np.zeros((n, width), np.int32)
+        for slot, req in decoding:
+            tokens[slot, 0] = req.out_tokens[-1]
+            m = int(k_eff[slot])
+            tokens[slot, 1:1 + m] = proposal.tokens[slot, :m]
+        if self.profile.needs_kv_pages:
+            for slot, req in decoding:
+                grown = self.scheduler.ensure_pages(
+                    req, int(self.cache.seq_lens[slot]) + int(lengths[slot]))
+                self._mirror_pages(req, grown)
+        sp = stack_params(params_list)
+        seq_lens_dev = jnp.asarray(self.cache.seq_lens)
+        page_table_dev = jnp.asarray(self.cache.page_table)
+        active_dev = jnp.asarray(active)
+        logits, pools = self.verifier.verify(
+            self.params, jnp.asarray(tokens), self.cache.pools,
+            page_table_dev, seq_lens_dev, jnp.asarray(lengths), active_dev,
+        )
+        out, acc = self.verifier.sample(
+            logits, jnp.asarray(tokens[:, 1:]), proposal.logits,
+            self._next_key(), sp, jnp.asarray(lengths), active_dev,
+        )
+        out = np.asarray(out)
+        acc = np.asarray(acc)
+        if self.verifier.needs_state_commit:
+            commit_lengths = np.where(active, acc + 1, 0).astype(np.int32)
+            pools = self.verifier.commit_state(
+                self.params, jnp.asarray(tokens), pools, page_table_dev,
+                seq_lens_dev, jnp.asarray(commit_lengths), active_dev,
+            )
+        jax.block_until_ready(pools)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.cache.pools = pools
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += n
+        self.stats.spec_steps += 1
+        for slot, req in decoding:
+            a = int(acc[slot])
+            self.stats.spec_drafted += int(k_eff[slot])
+            self.stats.spec_accepted += a
+            emitted = 0
+            for j in range(a + 1):
+                self._commit(req, int(out[slot, j]), events)
+                emitted += 1
+                if req.finish_reason is not None:
+                    break  # accepted tokens past EOS are discarded
+            self.stats.decode_tokens += emitted
+            if req.finish_reason is None:
+                self.cache.seq_lens[slot] += a + 1
+                self._recycle_window(req)
+
     def _commit(self, req: Request, token: int, events: list[TokenEvent]) -> None:
         if req.t_first_token is None:
             req.t_first_token = time.perf_counter()
@@ -432,6 +587,8 @@ class Server:
             slot = req.slot
             self.scheduler.finish(req)
             self.cache.reset_slot(slot)
+            if self.drafter is not None:
+                self.drafter.release_slot(slot)
             self.results[req.rid] = req
 
 

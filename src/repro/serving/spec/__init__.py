@@ -1,0 +1,23 @@
+"""Speculative decoding on the paged continuous-batching server.
+
+A drafter (a second, smaller zoo model with its own StateStore, or
+prompt-lookup n-gram self-drafting) proposes k tokens per request per
+round; the target verifies all k+1 positions in one fixed-shape batched
+step (chunked prefill lifted to every slot); exact rejection sampling
+preserves the target distribution — greedy speculative decode is bitwise
+identical to non-speculative decode. See docs/DESIGN.md §7.
+"""
+from repro.serving.spec.drafter import DraftProposal, ModelDrafter, NgramDrafter
+from repro.serving.spec.policy import SpecConfig, effective_k
+from repro.serving.spec.rejection import speculative_sample
+from repro.serving.spec.verify import Verifier
+
+__all__ = [
+    "DraftProposal",
+    "ModelDrafter",
+    "NgramDrafter",
+    "SpecConfig",
+    "Verifier",
+    "effective_k",
+    "speculative_sample",
+]

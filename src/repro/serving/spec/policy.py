@@ -1,0 +1,54 @@
+"""Speculation policy: configuration, per-request draft-length clamping,
+and acceptance accounting for the speculative serving loop.
+
+The knobs are deliberately few: ``k`` fixes the verify step's shape
+(every step verifies k+1 positions regardless of how many drafts a row
+actually fields — fixed shapes are what keep the step jit-cacheable), and
+everything per-request folds into :func:`effective_k`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Sizing of the speculative decode loop.
+
+    k: drafts proposed (and verified) per step; the verify step's token
+        width is k+1. Per-request ``spec_k`` can lower it for a request,
+        never raise it (the jitted shape is sized for k).
+    ngram_n: longest n-gram the prompt-lookup self-drafter matches on
+        (it backs off to shorter grams before giving up).
+    draft_chunk: token width of the model drafter's batched catch-up
+        steps (the drafter replays accepted/corrected tokens it has not
+        seen yet in chunks of this size).
+    """
+
+    k: int = 4
+    ngram_n: int = 3
+    draft_chunk: int = 16
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+        if self.ngram_n < 1:
+            raise ValueError(f"SpecConfig.ngram_n must be >= 1, got {self.ngram_n}")
+        if self.draft_chunk < 1:
+            raise ValueError(
+                f"SpecConfig.draft_chunk must be >= 1, got {self.draft_chunk}"
+            )
+
+
+def effective_k(requested: int, k_max: int, remaining: int, capacity: int) -> int:
+    """Draft count one request fields this step.
+
+    Bounded by the configured ``k_max`` (the verify step's shape), the
+    request's remaining token budget minus one (the final emitted token of
+    a round always comes from the target — drafting ``remaining`` deep
+    would verify a token that could never be emitted), and the cache
+    ``capacity`` left past the committed length (fresh K/V must land
+    inside the slot's page-table span). 0 means the row runs the verify
+    step as a plain one-token decode.
+    """
+    return max(0, min(requested, k_max, remaining - 1, capacity))

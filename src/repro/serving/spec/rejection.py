@@ -1,0 +1,122 @@
+"""Exact rejection sampling for speculative decoding.
+
+The invariant: for every request, the emitted token stream is distributed
+exactly as if the target model had decoded alone through the non-speculative
+sampler. Two ingredients make that hold:
+
+  - p and q are the SAME distributions the non-speculative path samples
+    from: ``filter_logits`` (temperature / top-k / top-p) applied to the
+    target's and drafter's logits, then softmax. A drafter proposal d_i is
+    accepted with probability min(1, p_i(d_i) / q_i(d_i)); on the first
+    rejection the replacement is drawn from the residual
+    normalize(max(p_i - q_i, 0)) (Leviathan et al., 2023 — the standard
+    correctness argument applies per position).
+  - greedy rows (temperature <= 0) take the deterministic degenerate case
+    explicitly: accept iff the draft equals the target argmax, and the
+    final token is the target argmax at the first mismatch (or the bonus
+    position). That makes greedy speculative decode bitwise identical to
+    the non-speculative greedy chain — the parity oracle CI enforces.
+
+The n-gram self-drafter has no q distribution; its proposals are
+deterministic, i.e. q = onehot(d), so min(1, p/q) reduces to accepting
+with probability p(d_i) and the residual to normalize(p - onehot(d)) —
+passed ``draft_logits=None`` the sampler does exactly that.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.sampling import filter_logits
+
+_EPS = 1e-30
+
+
+def _filtered_probs(logits, temperature, top_k, top_p):
+    """softmax(filter_logits) over a (S, T, V) stack, per-row params."""
+    s, t, v = logits.shape
+    flat = filter_logits(
+        logits.reshape(s * t, v),
+        jnp.repeat(temperature, t),
+        jnp.repeat(top_k, t),
+        jnp.repeat(top_p, t),
+    )
+    return jax.nn.softmax(flat, axis=-1).reshape(s, t, v)
+
+
+def speculative_sample(target_logits, draft_tokens, key, temperature, top_k,
+                       top_p, lengths, active, draft_logits=None):
+    """Accept/reject one round of drafts against the target's verify logits.
+
+    target_logits: (S, T, V) — logits after each verify position (position
+        i judges draft i+1; the last is the bonus position).
+    draft_tokens: (S, T-1) proposed tokens (right-padded).
+    temperature/top_k/top_p: (S,) per-request sampling params.
+    lengths: (S,) verify row widths = drafts fielded + 1 (0 = inactive).
+    active: (S,) rows taking part this round.
+    draft_logits: (S, T-1, V) drafter logits the proposals were sampled
+        from, or None when proposals are deterministic (q = onehot(d)).
+
+    Returns (out_tokens (S, T), n_accepted (S,)): row s emits
+    out_tokens[s, :n_accepted[s] + 1] — the accepted draft prefix plus one
+    target-sampled token (residual at the first rejection, bonus draw when
+    every draft survived). Entries past that are garbage.
+    """
+    s, t, v = target_logits.shape
+    kmax = t - 1
+    k_eff = jnp.clip(lengths - 1, 0, kmax)
+    greedy_row = temperature <= 0.0
+
+    p = _filtered_probs(target_logits, temperature, top_k, top_p)
+    tgt_argmax = jnp.argmax(target_logits.astype(jnp.float32), axis=-1)
+    p_at_d = jnp.take_along_axis(
+        p[:, :kmax], draft_tokens[..., None], axis=-1
+    )[..., 0]
+    if draft_logits is None:
+        q_at_d = jnp.ones((s, kmax), jnp.float32)
+    else:
+        q = _filtered_probs(draft_logits, temperature, top_k, top_p)
+        q_at_d = jnp.take_along_axis(
+            q, draft_tokens[..., None], axis=-1
+        )[..., 0]
+
+    key_u, key_r = jax.random.split(key)
+    u = jax.random.uniform(key_u, (s, kmax))
+    accept = jnp.where(
+        greedy_row[:, None],
+        draft_tokens == tgt_argmax[:, :kmax],
+        u < p_at_d / jnp.maximum(q_at_d, _EPS),
+    )
+    idx = jnp.arange(kmax, dtype=jnp.int32)[None, :]
+    accept = accept & (idx < k_eff[:, None])
+    # Accepted count = length of the all-accepted prefix.
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    # Final token: residual distribution at the first rejected position,
+    # or the bonus draw from p when every fielded draft survived.
+    p_a = jnp.take_along_axis(p, n_acc[:, None, None], axis=1)[:, 0]
+    d_idx = jnp.clip(n_acc, 0, kmax - 1)
+    d_a = jnp.take_along_axis(draft_tokens, d_idx[:, None], axis=1)[:, 0]
+    if draft_logits is None:
+        q_a = jax.nn.one_hot(d_a, v, dtype=p_a.dtype)
+    else:
+        q_a = jnp.take_along_axis(q, d_idx[:, None, None], axis=1)[:, 0]
+    bonus = n_acc >= k_eff
+    final = jnp.where(bonus[:, None], p_a, jnp.maximum(p_a - q_a, 0.0))
+    # An all-zero residual (p <= q everywhere, up to float error) falls
+    # back to p — the acceptance probability there was ~1, so the branch is
+    # measure-zero but must not emit from a degenerate distribution.
+    final = jnp.where(
+        jnp.sum(final, axis=-1, keepdims=True) > _EPS, final, p_a
+    )
+    sampled = jax.random.categorical(
+        key_r, jnp.log(jnp.maximum(final, _EPS)), axis=-1
+    )
+    greedy_tok = jnp.take_along_axis(tgt_argmax, n_acc[:, None], axis=1)[:, 0]
+    final_tok = jnp.where(greedy_row, greedy_tok, sampled).astype(jnp.int32)
+
+    out_idx = jnp.arange(t, dtype=jnp.int32)[None, :]
+    padded = jnp.pad(draft_tokens, ((0, 0), (0, 1))).astype(jnp.int32)
+    out = jnp.where(out_idx == n_acc[:, None], final_tok[:, None], padded)
+    n_acc = jnp.where(active, n_acc, 0)
+    return out, n_acc.astype(jnp.int32)

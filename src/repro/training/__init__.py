@@ -4,6 +4,7 @@ from repro.training.loop import (
     make_loss_fn,
     make_paged_serve_steps,
     make_serve_steps,
+    make_spec_verify_steps,
     make_train_step,
 )
 
@@ -13,5 +14,6 @@ __all__ = [
     "make_loss_fn",
     "make_paged_serve_steps",
     "make_serve_steps",
+    "make_spec_verify_steps",
     "make_train_step",
 ]

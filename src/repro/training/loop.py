@@ -221,3 +221,42 @@ def make_paged_serve_steps(model: Transformer, *, page_size: int,
             )
 
     return prefill_full, prefill_chunk, decode_step
+
+
+def make_spec_verify_steps(model: Transformer, *, page_size: int,
+                           engine: Engine | None = None,
+                           backend: str | None = None):
+    """(verify_step, commit_step) pair for speculative decoding over the
+    StateStore (``repro.serving.spec``). Both run the same slot-batched
+    multi-token step (``Transformer.verify_cb`` — chunked prefill lifted to
+    all slots, logits at every position) and differ only in whether
+    recurrent state rows commit:
+
+    ``verify_step`` leaves state rows untouched (the accepted prefix isn't
+    known until rejection sampling runs); ``commit_step`` re-scans with
+    ``lengths`` clamped to the accepted counts, advancing state rows exactly
+    through the accepted tokens. Attention-only targets skip the commit
+    pass — K/V written past the accepted boundary is never read back.
+    ``commit_step`` also doubles as the drafter's batched catch-up prefill.
+
+    verify/commit(params, tokens (S, T), pools, page_table (S, P),
+                  seq_lens (S,), lengths (S,), active (S,))
+        -> (logits (S, T, V), pools)
+    """
+    eng = resolve_engine(model, engine, backend)
+
+    def verify_step(params, tokens, pools, page_table, seq_lens, lengths, active):
+        with engine_scope(eng):
+            return model.verify_cb(
+                params, tokens, pools, page_table, seq_lens, lengths, active,
+                page_size=page_size, commit=False, engine=eng,
+            )
+
+    def commit_step(params, tokens, pools, page_table, seq_lens, lengths, active):
+        with engine_scope(eng):
+            return model.verify_cb(
+                params, tokens, pools, page_table, seq_lens, lengths, active,
+                page_size=page_size, commit=True, engine=eng,
+            )
+
+    return verify_step, commit_step

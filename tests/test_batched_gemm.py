@@ -271,15 +271,40 @@ def test_skinny_decode_blocks_clamp_block_m_to_m():
             assert bk >= 256  # freed VMEM goes into the K tile
     # resolve path preserves the skinny tile end to end
     assert tuning.resolve_block_sizes(1, 256, 512, policy=FP32_REF)[0] == 1
-    # just above the skinny table, the chunk table rounds M to the sublane
-    assert tuning.heuristic_block_sizes(9, 4096, 4096, jnp.float32)[0] == 16
+    # just above the skinny table, the verify table keeps block_m == M
+    assert tuning.heuristic_block_sizes(9, 4096, 4096, jnp.float32)[0] == 9
+
+
+def test_verify_blocks_exact_m_at_the_seam():
+    """Speculative-verify GEMMs (M = k+1 in 2..16) straddle the old
+    skinny/chunk seam at M=8: the verify table keeps block_m == M exactly
+    through 16 (an fp8 sublane round-up to 32 would be mostly padding)
+    with a K tile between the skinny and chunk depths."""
+    for m in (2, 3, 5, 9, 12, 16):
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn):
+            bm, bn, bk = tuning.heuristic_block_sizes(m, 4096, 4096, dt)
+            assert bm == m, (m, dt)
+            assert bn % 128 == 0
+            assert bk >= 256, (m, dt)
+    # Verify K depth sits between the skinny and chunk tables' depths.
+    _, _, bk_skinny = tuning.heuristic_block_sizes(8, 4096, 4096, jnp.float32)
+    _, _, bk_verify = tuning.heuristic_block_sizes(16, 4096, 4096, jnp.float32)
+    _, _, bk_chunk = tuning.heuristic_block_sizes(32, 4096, 4096, jnp.float32)
+    assert bk_chunk <= bk_verify <= bk_skinny
+    # Just above the verify table, sublane rounding resumes.
+    bm, _, _ = tuning.heuristic_block_sizes(17, 4096, 4096, jnp.float32)
+    assert bm == 24  # ceil(17, sublane 8)
+    # The autotune candidate list sweeps the verify seam.
+    assert {(3, 128, 512), (5, 128, 512), (9, 128, 384), (12, 128, 384),
+            (16, 128, 384)} <= set(tuning.AUTOTUNE_CANDIDATES)
 
 
 def test_chunk_prefill_blocks_round_m_to_chunk():
-    """Chunked-prefill GEMMs (M = chunk size, 16/32/64) get a sublane-sized
-    M tile — never a padded 128-row training tile — with a deeper K tile
-    than the training default."""
-    for m in (16, 32, 64):
+    """Chunked-prefill GEMMs (M = chunk size, 32/64 — 16 now belongs to the
+    exact-M verify table) get a sublane-sized M tile — never a padded
+    128-row training tile — with a deeper K tile than the training
+    default."""
+    for m in (32, 64):
         for dt in (jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn):
             bm, bn, bk = tuning.heuristic_block_sizes(m, 4096, 4096, dt)
             sub = tuning.SUBLANE[jnp.dtype(dt).itemsize]

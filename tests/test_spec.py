@@ -1,0 +1,398 @@
+"""Speculative decoding tests (repro.serving.spec).
+
+The load-bearing invariants, in order:
+
+  1. distribution preservation at the sampler level — the emitted-token
+     law equals the filtered target softmax for both drafter modes (model
+     q and deterministic/onehot q);
+  2. bitwise greedy parity — speculative decode through the server emits
+     exactly the non-speculative static chain, across attention,
+     sliding-window and hybrid-recurrent targets (the same oracle the
+     CB-vs-static tests use);
+  3. rollback hygiene — rejected drafts leave no trace in the drafter's
+     own StateStore, and no pages leak in either store.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serving import (
+    FINISH_EOS,
+    SamplingParams,
+    Server,
+    ServerConfig,
+    SpecConfig,
+    filter_logits,
+    generate_static,
+    speculative_sample,
+)
+from repro.serving.spec import ModelDrafter, NgramDrafter
+from repro.serving.spec.policy import effective_k
+
+
+def _fp32(cfg):
+    return dataclasses.replace(cfg, policy="fp32", kv_cache_dtype="fp32")
+
+
+@pytest.fixture(scope="module")
+def target():
+    cfg = _fp32(get_config("granite-3-8b", smoke=True))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def drafter_model():
+    cfg = _fp32(get_config("xlstm-125m", smoke=True))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+# Prompts with internal repetition so the n-gram self-drafter fields
+# proposals (random prompts rarely repeat an n-gram).
+_PROMPTS = [
+    [3, 5, 7, 9, 3, 5, 7, 9, 3, 5],
+    [11, 4, 11, 4, 11, 4, 2],
+    [1, 2, 3, 4, 5, 6, 7, 8],
+]
+
+
+def _static_refs(model, params, prompts, max_new):
+    refs = []
+    for p in prompts:
+        out, _ = generate_static(
+            model, params, {"tokens": np.asarray([p], np.int32)},
+            max_new_tokens=max_new,
+        )
+        refs.append(out[0].tolist())
+    return refs
+
+
+def _assert_no_leaks(server):
+    assert server.cache.allocator.num_held == 0
+    assert (server.cache.page_table == 0).all()
+    if server.drafter is not None and hasattr(server.drafter, "store"):
+        assert server.drafter.store.allocator.num_held == 0
+        assert (server.drafter.store.page_table == 0).all()
+        assert (server.drafter.store.seq_lens == 0).all()
+
+
+# -- policy -------------------------------------------------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_n=0)
+    with pytest.raises(ValueError):
+        SpecConfig(draft_chunk=0)
+
+
+def test_effective_k_clamps():
+    # bounded by configured k
+    assert effective_k(9, 4, remaining=100, capacity=100) == 4
+    # a request can lower k, never raise it
+    assert effective_k(2, 4, remaining=100, capacity=100) == 2
+    # remaining-1: the round's final token always comes from the target
+    assert effective_k(4, 4, remaining=3, capacity=100) == 2
+    assert effective_k(4, 4, remaining=1, capacity=100) == 0
+    # cache capacity past the committed length
+    assert effective_k(4, 4, remaining=100, capacity=1) == 1
+    assert effective_k(4, 4, remaining=0, capacity=0) == 0
+
+
+# -- n-gram proposer ----------------------------------------------------------
+
+def test_ngram_lookup_proposes_repeated_continuation():
+    d = NgramDrafter(k=4, ngram_n=3)
+    # history ...[7, 9] occurred earlier followed by [3, 5, 7, 9]
+    hist = [3, 5, 7, 9, 3, 5, 7, 9]
+    want = np.asarray([4])
+    prop = d.propose({0: hist}, want, None, None)
+    assert prop.logits is None
+    assert prop.counts[0] == 4
+    assert prop.tokens[0].tolist() == [3, 5, 7, 9]
+
+
+def test_ngram_lookup_backs_off_and_gives_up():
+    d = NgramDrafter(k=4, ngram_n=3)
+    # the 3-gram and 2-gram suffixes are unique; the 1-gram [2] repeats
+    prop = d.propose({0: [2, 9, 1, 5, 2]}, np.asarray([4]), None, None)
+    assert prop.counts[0] == 4
+    assert prop.tokens[0].tolist() == [9, 1, 5, 2]
+    # no token repeats at any n: no proposals, row decays to plain decode
+    prop = d.propose({0: [1, 2, 3, 4]}, np.asarray([4]), None, None)
+    assert prop.counts[0] == 0
+
+
+# -- rejection sampler --------------------------------------------------------
+
+def test_speculative_sample_greedy_prefix_semantics():
+    """Greedy rows accept exactly the drafts matching the target argmax
+    chain and emit the argmax at the first mismatch / bonus position."""
+    v = 8
+    tl = np.full((2, 3, v), -10.0, np.float32)
+    tl[:, 0, 4] = tl[:, 1, 5] = tl[:, 2, 6] = 10.0  # argmax chain 4, 5, 6
+    temp = jnp.zeros((2,))
+    tk = jnp.zeros((2,), jnp.int32)
+    tp = jnp.ones((2,))
+    lengths = jnp.asarray([3, 3], jnp.int32)
+    act = jnp.ones((2,), bool)
+    drafts = jnp.asarray([[4, 5], [4, 9]], jnp.int32)
+    out, acc = speculative_sample(
+        jnp.asarray(tl), drafts, jax.random.PRNGKey(0), temp, tk, tp,
+        lengths, act,
+    )
+    out, acc = np.asarray(out), np.asarray(acc)
+    assert acc.tolist() == [2, 1]
+    assert out[0, :3].tolist() == [4, 5, 6]  # all accepted + bonus argmax
+    assert out[1, :2].tolist() == [4, 5]  # correction replaces the miss
+
+
+def test_speculative_sample_zero_drafts_is_plain_decode():
+    v = 8
+    tl = np.full((1, 3, v), -10.0, np.float32)
+    tl[:, 0, 2] = 10.0
+    out, acc = speculative_sample(
+        jnp.asarray(tl), jnp.zeros((1, 2), jnp.int32), jax.random.PRNGKey(0),
+        jnp.zeros((1,)), jnp.zeros((1,), jnp.int32), jnp.ones((1,)),
+        jnp.asarray([1], jnp.int32), jnp.ones((1,), bool),
+    )
+    assert int(np.asarray(acc)[0]) == 0
+    assert int(np.asarray(out)[0, 0]) == 2
+
+
+@pytest.mark.parametrize("mode", ["model_q", "onehot_q"])
+def test_speculative_sample_preserves_target_distribution(mode):
+    """Empirical law of the first emitted token over many keys equals the
+    filtered target softmax — with temperature and top-p active, for both
+    a model drafter (q = filtered drafter softmax) and deterministic
+    proposals (q = onehot). The onehot case is exact for ANY proposal
+    distribution: accept w.p. p(d), resample from p-without-d otherwise."""
+    rng = np.random.default_rng(0)
+    v, k = 8, 2
+    tl = jnp.asarray(rng.standard_normal((1, k + 1, v)).astype(np.float32)) * 2
+    dl = jnp.asarray(rng.standard_normal((1, k, v)).astype(np.float32)) * 2
+    temp = jnp.asarray([0.7])
+    tk = jnp.asarray([0], jnp.int32)
+    tp = jnp.asarray([0.9])
+    lengths = jnp.asarray([k + 1], jnp.int32)
+    act = jnp.asarray([True])
+    expect = jax.nn.softmax(filter_logits(tl[:, 0], temp, tk, tp))[0]
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        if mode == "model_q":
+            d = jax.random.categorical(
+                k1,
+                filter_logits(
+                    dl.reshape(k, v), jnp.repeat(temp, k),
+                    jnp.repeat(tk, k), jnp.repeat(tp, k),
+                ),
+            )[None]
+            out, _ = speculative_sample(
+                tl, d, k2, temp, tk, tp, lengths, act, draft_logits=dl,
+            )
+        else:
+            d = jax.random.categorical(k1, jnp.zeros((k, v)))[None]
+            out, _ = speculative_sample(tl, d, k2, temp, tk, tp, lengths, act)
+        return out[0, 0]
+
+    n = 4000
+    toks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(42), n))
+    emp = np.bincount(np.asarray(toks), minlength=v) / n
+    tv = 0.5 * np.abs(emp - np.asarray(expect)).sum()
+    assert tv < 0.05, (mode, tv)
+
+
+# -- greedy parity across target families -------------------------------------
+
+@pytest.mark.parametrize(
+    "arch", ["granite-3-8b", "gemma2-2b", "recurrentgemma-2b"]
+)
+def test_spec_greedy_parity_vs_static(arch):
+    """Greedy speculative decode (n-gram self-drafting) is token-for-token
+    identical to non-speculative static decode — across a pure-attention,
+    a sliding-window and a hybrid-recurrent target (the latter exercises
+    the state-row commit pass)."""
+    cfg = _fp32(get_config(arch, smoke=True))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    refs = _static_refs(model, params, _PROMPTS, max_new=16)
+    server = Server(
+        model, params,
+        ServerConfig(num_slots=4, page_size=8, max_seq_len=64),
+        spec=SpecConfig(k=4, ngram_n=3),
+    )
+    reqs = [server.submit(p, max_new_tokens=16) for p in _PROMPTS]
+    server.run()
+    for req, ref in zip(reqs, refs):
+        assert req.out_tokens == ref, (arch, req.rid)
+    _assert_no_leaks(server)
+
+
+def test_spec_model_drafter_greedy_parity(target, drafter_model):
+    """Parity also holds with a real (attention-free xlstm) drafter model:
+    whatever it proposes, rejection sampling only ever emits the target's
+    greedy chain."""
+    _, model, params = target
+    _, dmodel, dparams = drafter_model
+    refs = _static_refs(model, params, _PROMPTS, max_new=12)
+    server = Server(
+        model, params,
+        ServerConfig(num_slots=4, page_size=8, max_seq_len=64),
+        spec=SpecConfig(k=3), draft_model=dmodel, draft_params=dparams,
+    )
+    reqs = [server.submit(p, max_new_tokens=12) for p in _PROMPTS]
+    server.run()
+    for req, ref in zip(reqs, refs):
+        assert req.out_tokens == ref
+    _assert_no_leaks(server)
+
+
+def test_spec_vocab_mismatch_rejected(target):
+    _, model, params = target
+    cfg2 = dataclasses.replace(
+        _fp32(get_config("xlstm-125m", smoke=True)),
+        vocab_size=model.cfg.vocab_size * 2,
+    )
+    dmodel = build(cfg2)
+    with pytest.raises(ValueError, match="vocabulary"):
+        Server(model, params, ServerConfig(num_slots=2, page_size=8,
+                                           max_seq_len=32),
+               spec=SpecConfig(k=2), draft_model=dmodel,
+               draft_params=None)
+
+
+# -- server integration -------------------------------------------------------
+
+def test_spec_eos_mid_round_matches_nonspec(target):
+    """A draft token equal to eos finishes the request exactly where the
+    non-speculative chain would; accepted tokens past it are discarded."""
+    _, model, params = target
+    prompt = _PROMPTS[0]
+    base = Server(model, params,
+                  ServerConfig(num_slots=2, page_size=8, max_seq_len=64))
+    ref = base.submit(prompt, max_new_tokens=16)
+    base.run()
+    assert len(ref.out_tokens) > 3
+    eos = ref.out_tokens[3]
+    base.reset()
+    r1 = base.submit(prompt, max_new_tokens=16, eos_id=eos)
+    base.run()
+    spec = Server(model, params,
+                  ServerConfig(num_slots=2, page_size=8, max_seq_len=64),
+                  spec=SpecConfig(k=4, ngram_n=3))
+    r2 = spec.submit(prompt, max_new_tokens=16, eos_id=eos)
+    spec.run()
+    assert r2.out_tokens == r1.out_tokens
+    assert r2.finish_reason == r1.finish_reason == FINISH_EOS
+    _assert_no_leaks(spec)
+
+
+def test_spec_per_request_k(target):
+    """spec_k=1 caps a request's draft depth below the server's k."""
+    _, model, params = target
+    server = Server(model, params,
+                    ServerConfig(num_slots=2, page_size=8, max_seq_len=64),
+                    spec=SpecConfig(k=4, ngram_n=3))
+    req = server.submit(_PROMPTS[0], max_new_tokens=8, spec_k=1)
+    server.run()
+    assert server.stats.spec_steps > 0
+    assert server.stats.spec_drafted <= server.stats.spec_steps
+    # parity still holds under the cap
+    ref = _static_refs(model, params, [_PROMPTS[0]], max_new=8)[0]
+    assert req.out_tokens == ref
+
+
+def test_spec_stats_accounting(target):
+    _, model, params = target
+    server = Server(model, params,
+                    ServerConfig(num_slots=4, page_size=8, max_seq_len=64),
+                    spec=SpecConfig(k=4, ngram_n=3))
+    for p in _PROMPTS:
+        server.submit(p, max_new_tokens=16)
+    server.run()
+    st = server.stats
+    assert st.spec_steps == st.decode_steps > 0
+    assert 0 <= st.spec_accepted <= st.spec_drafted
+    assert st.acceptance_rate == st.spec_accepted / st.spec_drafted
+    assert st.accepted_per_step == st.spec_accepted / st.spec_steps
+    # every emitted decode token is accepted-draft + one target token/round
+    assert st.decode_tokens >= st.spec_steps
+    # the repetitive prompts must actually exercise acceptance
+    assert st.spec_accepted > 0
+
+
+def test_spec_sampled_matches_nonspec_distribution(target):
+    """Seeded statistical check at the server level: with temperature +
+    top-k sampling, speculative decoding's emitted-token frequencies match
+    the non-speculative server's (the laws are equal; the RNG streams are
+    not, so this is a two-sample comparison over seeds)."""
+    _, model, params = target
+    sp = SamplingParams(temperature=1.0, top_k=2)
+    prompt = _PROMPTS[0]
+    n_seeds = 60
+
+    def collect(spec):
+        kw = dict(spec=SpecConfig(k=3, ngram_n=3)) if spec else {}
+        server = Server(model, params,
+                        ServerConfig(num_slots=2, page_size=8, max_seq_len=64),
+                        **kw)
+        toks = []
+        for s in range(n_seeds):
+            server.seed = s
+            server.reset()
+            req = server.submit(prompt, max_new_tokens=3, sampling=sp)
+            server.run()
+            toks.append(req.out_tokens)
+        return np.asarray(toks)  # (n_seeds, 3)
+
+    spec_t = collect(True)
+    base_t = collect(False)
+    # Position 0 is sampled by the prefill path in both servers; positions
+    # 1..2 go through rejection sampling only in the speculative server.
+    for pos in (1, 2):
+        support = np.union1d(spec_t[:, pos], base_t[:, pos])
+        for tok in support:
+            f_spec = float(np.mean(spec_t[:, pos] == tok))
+            f_base = float(np.mean(base_t[:, pos] == tok))
+            assert abs(f_spec - f_base) < 0.3, (pos, tok, f_spec, f_base)
+
+
+# -- drafter rollback ---------------------------------------------------------
+
+def test_model_drafter_rollback_consistency(drafter_model):
+    """After propose() the drafter's state equals a pure replay of the
+    committed tokens: draft-time writes are fully rolled back, so a
+    drafter that speculated (and was partially rejected) is
+    indistinguishable from one that never drafted."""
+    _, dmodel, dparams = drafter_model
+    kw = dict(num_slots=2, page_size=8, max_seq_len=64, k=3)
+    d1 = ModelDrafter(dmodel, dparams, **kw)
+    d2 = ModelDrafter(dmodel, dparams, **kw)
+    ctx = {0: [3, 5, 7, 9, 3, 5], 1: [11, 4, 11, 4]}
+    want = np.asarray([3, 3], np.int32)
+    params_list = [SamplingParams(), SamplingParams()]
+    d1.propose(ctx, want, jax.random.PRNGKey(0), params_list)
+    # extend as if the target emitted two more tokens, then propose again
+    ctx2 = {0: ctx[0] + [1, 2], 1: ctx[1] + [4, 11]}
+    d1.propose(ctx2, want, jax.random.PRNGKey(1), params_list)
+    # a fresh drafter replaying the full histories (no drafting at all)
+    d2._replay(ctx2)
+    assert (d1.store.seq_lens == d2.store.seq_lens).all()
+    for a, b in zip(jax.tree.leaves(d1.store.pools),
+                    jax.tree.leaves(d2.store.pools)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-5,
+        )
+    d1.reset()
+    assert d1.store.allocator.num_held == 0
