@@ -66,6 +66,10 @@ class Rows:
 # shared CI runner (absolute microbench times).
 GATE_FIELDS = ("tok_s", "utilization", "acceptance_rate")
 
+# Lower-is-better metrics (latencies): the baseline value is a CEILING —
+# the current run fails when it exceeds baseline * (1 + tolerance).
+LOWER_GATE_FIELDS = ("itl_p50_ms", "itl_p95_ms")
+
 
 def load_rows_json(path: str) -> dict:
     import json
@@ -75,41 +79,62 @@ def load_rows_json(path: str) -> dict:
 
 
 def compare_rows(current: dict, baseline: dict, *, tolerance: float = 0.15,
-                 fields=GATE_FIELDS) -> list[str]:
+                 fields=GATE_FIELDS, lower_fields=LOWER_GATE_FIELDS,
+                 label: str | None = None) -> list[str]:
     """Regressions of ``current`` vs ``baseline`` (both ``Rows.to_json()``
     docs). For every gate field a baseline row carries, the current run must
-    reach at least ``(1 - tolerance) *`` the baseline value; a baseline row
-    missing from the current run is itself a failure (comparability broke).
-    Returns human-readable failure strings, empty when the gate passes.
+    reach at least ``(1 - tolerance) *`` the baseline value; ``lower_fields``
+    invert the sense (latency ceilings: fail when the current run exceeds
+    ``(1 + tolerance) *`` baseline). A baseline row missing from the current
+    run is itself a failure (comparability broke). ``label`` names the
+    baseline file in every failure string, so a CI log says *which* gate
+    fired when several baselines are in play. Returns human-readable failure
+    strings, empty when the gate passes.
     """
     cur = {
         r["name"]: r
         for rs in current.get("sections", {}).values()
         for r in rs
     }
+    src = f" [vs {label}]" if label else ""
     failures = []
     for rs in baseline.get("sections", {}).values():
         for base in rs:
-            gated = [f for f in fields if base.get(f) is not None]
-            if not gated:
+            floors = [f for f in fields if base.get(f) is not None]
+            ceils = [f for f in lower_fields if base.get(f) is not None]
+            if not floors and not ceils:
                 continue
             row = cur.get(base["name"])
             if row is None:
                 failures.append(
                     f"{base['name']}: row missing from the current run "
-                    f"(baseline gates {', '.join(gated)})"
+                    f"(baseline gates {', '.join(floors + ceils)}){src}"
                 )
                 continue
-            for f in gated:
+            for f in floors:
                 got = row.get(f)
                 want = float(base[f])
                 floor = want * (1.0 - tolerance)
                 if got is None:
                     failures.append(f"{base['name']}: field {f} missing "
-                                    f"(baseline {want:g})")
+                                    f"(baseline {want:g}){src}")
                 elif float(got) < floor:
                     failures.append(
                         f"{base['name']}: {f} {float(got):g} < "
                         f"{floor:g} ({want:g} baseline - {tolerance:.0%})"
+                        f"{src}"
+                    )
+            for f in ceils:
+                got = row.get(f)
+                want = float(base[f])
+                ceil = want * (1.0 + tolerance)
+                if got is None:
+                    failures.append(f"{base['name']}: field {f} missing "
+                                    f"(baseline ceiling {want:g}){src}")
+                elif float(got) > ceil:
+                    failures.append(
+                        f"{base['name']}: {f} {float(got):g} > "
+                        f"{ceil:g} ({want:g} baseline + {tolerance:.0%})"
+                        f"{src}"
                     )
     return failures

@@ -62,7 +62,8 @@ def main(argv=None) -> None:
     if args.compare:
         from benchmarks.common import compare_rows, load_rows_json
 
-        failures = compare_rows(rows.to_json(), load_rows_json(args.compare))
+        failures = compare_rows(rows.to_json(), load_rows_json(args.compare),
+                                label=args.compare)
         if failures:
             for f in failures:
                 print(f"# REGRESSION {f}")

@@ -91,6 +91,15 @@ def _bench_arch(rows: Rows, arch: str, family: str, smoke: bool) -> dict:
     cb_tok_s = s.decode_tok_s
     cb_util = s.utilization
     ttft_p50, ttft_p95 = server.ttft_percentiles() or (0.0, 0.0)
+    # Histogram-derived latencies from the metrics registry (warmup resets
+    # it, so the snapshot covers exactly the timed run). The exact TTFT
+    # percentiles above and the bucketed ones below must agree to within
+    # one log bucket — a tested invariant.
+    hists = server.metrics.snapshot()["histograms"]
+    itl = hists.get("serving_inter_token_seconds", {})
+    itl_p50 = (itl.get("p50") or 0.0) * 1e3
+    itl_p95 = (itl.get("p95") or 0.0) * 1e3
+    ttft_hist = hists.get("serving_ttft_seconds", {})
 
     # -- static batching baseline (arrival-order groups, padded prompts) ---
     static_steps = 0
@@ -125,7 +134,13 @@ def _bench_arch(rows: Rows, arch: str, family: str, smoke: bool) -> dict:
     rows.add(f"{pre}/continuous/ttft_ms", None,
              f"p50 {ttft_p50 * 1e3:.1f} / p95 {ttft_p95 * 1e3:.1f}",
              ttft_p50_ms=ttft_p50 * 1e3, ttft_p95_ms=ttft_p95 * 1e3,
+             ttft_hist_p50_ms=(ttft_hist.get("p50") or 0.0) * 1e3,
+             ttft_hist_p95_ms=(ttft_hist.get("p95") or 0.0) * 1e3,
              prefill_chunk=_PREFILL_CHUNK, arch=arch, arch_family=family)
+    rows.add(f"{pre}/continuous/itl_ms", None,
+             f"p50 {itl_p50:.1f} / p95 {itl_p95:.1f}",
+             itl_p50_ms=itl_p50, itl_p95_ms=itl_p95,
+             itl_samples=itl.get("count", 0), arch=arch, arch_family=family)
     rows.add(f"{pre}/static/decode_tok_s", None, f"{static_tok_s:.1f}",
              tok_s=static_tok_s, decode_steps=static_steps, arch=arch,
              arch_family=family)
@@ -138,6 +153,7 @@ def _bench_arch(rows: Rows, arch: str, family: str, smoke: bool) -> dict:
         "cb_tok_s": cb_tok_s, "static_tok_s": static_tok_s,
         "cb_util": cb_util, "static_util": static_util, "speedup": speedup,
         "ttft_p50_ms": ttft_p50 * 1e3, "ttft_p95_ms": ttft_p95 * 1e3,
+        "itl_p50_ms": itl_p50, "itl_p95_ms": itl_p95,
     }
 
 
@@ -414,7 +430,8 @@ def main(argv=None):
     if args.compare:
         from benchmarks.common import compare_rows, load_rows_json
 
-        failures = compare_rows(rows.to_json(), load_rows_json(args.compare))
+        failures = compare_rows(rows.to_json(), load_rows_json(args.compare),
+                                label=args.compare)
         if failures:
             for f in failures:
                 print(f"# REGRESSION {f}")

@@ -1,0 +1,164 @@
+"""Validate a Chrome trace-event JSON written by ``repro.obs.JsonTracer``.
+
+  PYTHONPATH=src python scripts/validate_trace.py trace.json
+
+Checks, in file (= emission) order:
+
+- the document is ``{"traceEvents": [...]}`` and every event has the
+  required keys (name/ph/pid/tid/ts) with a known phase;
+- per (pid, tid) track, timestamps are monotonically non-decreasing —
+  JsonTracer emits B/E spans at entry/exit in real time, so any
+  out-of-order event means a broken clock or a hand-edited file;
+- B/E span nesting is well-formed per track (every E matches the name on
+  top of the open-span stack; nothing is left open at EOF);
+- every request track that carries a "finished" instant has a complete
+  span chain: a closed "request" span containing at least one "queued"
+  span, at least one "prefill_chunk" span, and a closed "decode" span.
+
+Exit status 1 with one message per problem; importable (``load_trace`` /
+``validate_events`` / ``validate_request_chains``) so tests can run the
+same checks in-process. CI runs this on the serving-smoke trace artifact
+so a malformed event fails the job, not the Perfetto user three weeks
+later.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+KNOWN_PHASES = {"B", "E", "i", "I", "M", "C", "X"}
+REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
+
+# JsonTracer track constants (mirrored here so the script stands alone —
+# it must run against an artifact without PYTHONPATH=src).
+PID_REQUESTS = 1
+
+
+def load_trace(path: str) -> list[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError(f"{path}: not a Chrome trace document "
+                         "(missing 'traceEvents')")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: 'traceEvents' is not a list")
+    return events
+
+
+def validate_events(events: list[dict]) -> list[str]:
+    """Structural checks: required keys, known phases, per-track ts
+    monotonicity, B/E stack nesting. Returns a list of error strings."""
+    errors: list[str] = []
+    last_ts: dict[tuple, float] = {}
+    stacks: dict[tuple, list[str]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in ev]
+        if missing:
+            errors.append(f"event {i}: missing keys {missing}")
+            continue
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            errors.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        track = (ev["pid"], ev["tid"])
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)):
+            errors.append(f"event {i}: ts is not a number")
+            continue
+        if ph != "M":  # metadata is pinned at ts=0 whenever emitted
+            if ts < last_ts.get(track, float("-inf")):
+                errors.append(
+                    f"event {i} ({ev['name']!r}): ts {ts} goes backwards "
+                    f"on track pid={track[0]} tid={track[1]}"
+                )
+            last_ts[track] = ts
+        if ph == "B":
+            stacks.setdefault(track, []).append(ev["name"])
+        elif ph == "E":
+            stack = stacks.setdefault(track, [])
+            if not stack:
+                errors.append(
+                    f"event {i}: E {ev['name']!r} with no open span on "
+                    f"track pid={track[0]} tid={track[1]}"
+                )
+            elif stack[-1] != ev["name"]:
+                errors.append(
+                    f"event {i}: E {ev['name']!r} does not match open "
+                    f"span {stack[-1]!r} on track pid={track[0]} "
+                    f"tid={track[1]}"
+                )
+            else:
+                stack.pop()
+    for track, stack in stacks.items():
+        if stack:
+            errors.append(
+                f"track pid={track[0]} tid={track[1]}: spans left open "
+                f"at EOF: {stack}"
+            )
+    return errors
+
+
+def validate_request_chains(events: list[dict]) -> list[str]:
+    """Every request track with a 'finished' instant must show the full
+    lifecycle: request > (queued+, prefill_chunk+, decode), all closed."""
+    errors: list[str] = []
+    tracks: dict[int, list[dict]] = {}
+    for ev in events:
+        if ev.get("pid") == PID_REQUESTS and ev.get("ph") != "M":
+            tracks.setdefault(ev["tid"], []).append(ev)
+    for tid, evs in sorted(tracks.items()):
+        if not any(e["ph"] in ("i", "I") and e["name"] == "finished"
+                   for e in evs):
+            continue  # skipped/unfinished request: no chain requirement
+        closed = {}
+        for e in evs:
+            if e["ph"] == "B":
+                closed[e["name"]] = closed.get(e["name"], 0) - 1
+            elif e["ph"] == "E":
+                closed[e["name"]] = closed.get(e["name"], 0) + 1
+        for name in ("request", "queued", "prefill_chunk", "decode"):
+            opens = sum(1 for e in evs if e["ph"] == "B" and e["name"] == name)
+            if opens == 0:
+                errors.append(
+                    f"request track tid={tid}: finished without any "
+                    f"{name!r} span"
+                )
+            elif closed.get(name, 0) != 0:
+                errors.append(
+                    f"request track tid={tid}: {name!r} span not closed"
+                )
+    return errors
+
+
+def validate(path: str) -> list[str]:
+    try:
+        events = load_trace(path)
+    except (ValueError, json.JSONDecodeError, OSError) as e:
+        return [str(e)]
+    return validate_events(events) + validate_request_chains(events)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python scripts/validate_trace.py TRACE.json",
+              file=sys.stderr)
+        return 2
+    errors = validate(argv[0])
+    for msg in errors:
+        print(f"INVALID: {msg}", file=sys.stderr)
+    if errors:
+        print(f"{argv[0]}: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    events = load_trace(argv[0])
+    spans = sum(1 for e in events if e.get("ph") == "B")
+    print(f"{argv[0]}: OK ({len(events)} events, {spans} spans)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build
+from repro.obs import JsonTracer, device_capture, write_metrics, write_trace
 from repro.serving import (
     SamplingParams,
     Server,
@@ -95,6 +96,17 @@ def main(argv=None):
         "--backend", choices=("", "xla", "pallas", "pallas_interpret"),
         default="", help="GEMM engine backend override (default: config)",
     )
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a request-lifecycle trace of the timed run: "
+                         "Chrome trace-event JSON (open in ui.perfetto.dev) "
+                         "or JSONL when PATH ends in .jsonl")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot (counters, gauges, "
+                         "latency histograms, step profile): JSON, or "
+                         "Prometheus text when PATH ends in .prom/.txt")
+    ap.add_argument("--profile", default=None, metavar="LOGDIR",
+                    help="capture a jax.profiler device trace of the timed "
+                         "run into LOGDIR (TensorBoard/Perfetto-loadable)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -132,6 +144,9 @@ def main(argv=None):
                 )
 
     if mode == "static":
+        if args.trace_out or args.metrics_out or args.profile:
+            print("note: --trace-out/--metrics-out/--profile instrument the "
+                  "continuous server; they are inert under static mode")
         tokens = rng.integers(
             0, cfg.vocab_size, size=(args.requests, args.prompt_len)
         ).astype(np.int32)
@@ -167,6 +182,7 @@ def main(argv=None):
         prompts = [list(rng.integers(0, cfg.vocab_size, size=ln))
                    for ln in lens]
     max_seq = max(len(p) for p in prompts) + args.max_new
+    tracer = JsonTracer() if args.trace_out else None
     server = Server(
         model, params,
         ServerConfig(
@@ -178,6 +194,7 @@ def main(argv=None):
         ),
         engine=eng, seed=args.seed, spec=spec,
         draft_model=draft_model, draft_params=draft_params,
+        tracer=tracer,
     )
     prof = server.profile
     print(f"state store: {server.cache.allocator.num_pages} pages x "
@@ -197,20 +214,21 @@ def main(argv=None):
         server.submit(p, max_new_tokens=args.max_new, sampling=sampling,
                       priority=priority)
 
-    if args.preempt:
-        # Priority burst: the first half starts prefilling at the base
-        # priority, then the second half arrives above it — a uniform
-        # priority could never trigger a preemption.
-        half = max(1, len(prompts) // 2)
-        for p in prompts[:half]:
-            submit(p, args.priority)
-        server.step()
-        for p in prompts[half:]:
-            submit(p, args.priority + 5)
-    else:
-        for p in prompts:
-            submit(p, args.priority)
-    results = server.run()
+    with device_capture(args.profile):
+        if args.preempt:
+            # Priority burst: the first half starts prefilling at the base
+            # priority, then the second half arrives above it — a uniform
+            # priority could never trigger a preemption.
+            half = max(1, len(prompts) // 2)
+            for p in prompts[:half]:
+                submit(p, args.priority)
+            server.step()
+            for p in prompts[half:]:
+                submit(p, args.priority + 5)
+        else:
+            for p in prompts:
+                submit(p, args.priority)
+        results = server.run()
     s = server.stats
     print(f"continuous: {len(results)} requests, {s.decode_tokens} decode "
           f"tokens in {s.decode_steps} steps over {args.num_slots} slots"
@@ -240,6 +258,21 @@ def main(argv=None):
         print(f"  req {rid}: prompt {r.prompt_len:>3} -> "
               f"{r.num_generated} tokens ({r.finish_reason}): "
               f"{r.out_tokens}")
+
+    # Flush observability artifacts BEFORE the spec gate: its reference run
+    # and reset() would wipe the timed run's metrics and trace.
+    run_meta = {"arch": args.arch, "mode": mode, "requests": args.requests,
+                "seed": args.seed}
+    if args.trace_out:
+        fmt = write_trace(tracer, args.trace_out, meta=run_meta)
+        print(f"trace: {len(tracer.events)} events -> {args.trace_out} "
+              f"({fmt}; chrome format opens in ui.perfetto.dev)")
+    if args.metrics_out:
+        fmt = write_metrics(server.metrics, args.metrics_out,
+                            profiler=server.profiler, meta=run_meta)
+        print(f"metrics: snapshot -> {args.metrics_out} ({fmt})")
+    if args.trace_out or args.metrics_out or args.profile:
+        print(server.profiler.format_summary())
 
     if spec is not None and args.spec_gate:
         failures = []

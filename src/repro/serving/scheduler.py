@@ -114,9 +114,18 @@ class Request:
     age: int = 0
     # Times this request was preempted back to QUEUED.
     preemptions: int = 0
-    # Wall-clock marks for TTFT reporting (set by the server).
+    # Wall-clock marks for latency reporting (set by the server).
     t_submit: float = 0.0
+    # Last transition into QUEUED — submit, or a preemption. The server's
+    # queue-wait histogram measures from here, so a preempted request's
+    # second wait counts as a second (real) queue-wait sample.
+    t_queued: float = 0.0
+    t_admit: float = 0.0
     t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    # Draft tokens this request accepted across all speculative rounds.
+    spec_accepted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -146,7 +155,8 @@ class Scheduler:
                  kv_reserve_tokens: Optional[int] = None,
                  prefix_cache: bool = False,
                  preemption: bool = False,
-                 aging_steps: int = 32):
+                 aging_steps: int = 32,
+                 metrics=None):
         self.pool = pool
         self.pages_per_slot = pages_per_slot
         slot_cap = pages_per_slot * pool.page_size
@@ -171,6 +181,25 @@ class Scheduler:
         # resume counts again — its hit is a genuine saving).
         self.prefix_hit_tokens = 0
         self.prefix_prompt_tokens = 0
+        # Optional MetricsRegistry (duck-typed to avoid an import cycle with
+        # repro.obs): queue/running occupancy gauges + request counters.
+        self.metrics = metrics
+        if metrics is not None:
+            self._c_submitted = metrics.counter(
+                "serving_requests_submitted_total",
+                "Requests accepted by Scheduler.submit")
+            self._c_finished = metrics.counter(
+                "serving_requests_finished_total",
+                "Requests that reached FINISHED")
+            self._g_queue_depth = metrics.gauge(
+                "serving_queue_depth", "Requests waiting in the queue")
+            self._g_running = metrics.gauge(
+                "serving_running_requests", "Requests holding a decode slot")
+
+    def _sync_gauges(self) -> None:
+        if self.metrics is not None:
+            self._g_queue_depth.set(len(self.queue))
+            self._g_running.set(len(self.running))
 
     # -- introspection -----------------------------------------------------
     def has_work(self) -> bool:
@@ -230,6 +259,9 @@ class Scheduler:
             request.rid = next(self._rids)
         request.status = QUEUED
         self.queue.append(request)
+        if self.metrics is not None:
+            self._c_submitted.inc()
+            self._sync_gauges()
         return request
 
     # -- prefix cache ------------------------------------------------------
@@ -311,6 +343,7 @@ class Scheduler:
                 break
             self.queue.pop(0)
             admitted.append(req)
+        self._sync_gauges()
         return admitted
 
     def _try_admit(self, req: Request) -> bool:
@@ -423,6 +456,7 @@ class Scheduler:
         req.preemptions += 1
         self.preemptions += 1
         self.queue.append(req)
+        self._sync_gauges()
         if on_preempt is not None:
             on_preempt(slot)
 
@@ -494,3 +528,6 @@ class Scheduler:
         req.pages = []
         req.status = FINISHED
         self.completed += 1
+        if self.metrics is not None:
+            self._c_finished.inc()
+            self._sync_gauges()

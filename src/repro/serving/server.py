@@ -35,6 +35,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.training import make_paged_serve_steps, make_serve_steps
+from repro.obs import (
+    DEVICE_TID,
+    PID_DEVICE,
+    PID_REQUESTS,
+    MetricsRegistry,
+    NullTracer,
+    StepProfiler,
+)
 from repro.serving.cache import StateStore, copy_kv_page
 from repro.serving.sampling import (
     GREEDY,
@@ -106,26 +114,85 @@ class TokenEvent(NamedTuple):
     finish_reason: Optional[str]
 
 
-@dataclasses.dataclass
 class ServerStats:
-    prefill_calls: int = 0
-    prefill_tokens: int = 0  # valid prompt tokens prefilled
-    decode_steps: int = 0
-    decode_tokens: int = 0  # tokens sampled for *active* slots
-    slot_steps: int = 0  # decode_steps * num_slots (capacity offered)
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
+    """Read-only view over the server's :class:`MetricsRegistry` — the
+    registry is the single source of truth (one set of counters feeds the
+    launcher report, the benchmark rows, the Prometheus exposition and the
+    JSON snapshot); this class keeps the pre-registry field names every
+    caller already uses. Constructible standalone (fresh registry) for
+    tests."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self._m = registry if registry is not None else MetricsRegistry()
+
+    def _c(self, name: str) -> float:
+        return self._m.counter(name).value
+
+    @property
+    def prefill_calls(self) -> int:
+        return int(self._c("serving_prefill_calls_total"))
+
+    @property
+    def prefill_tokens(self) -> int:
+        """Valid prompt tokens prefilled."""
+        return int(self._c("serving_prefill_tokens_total"))
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._c("serving_decode_steps_total"))
+
+    @property
+    def decode_tokens(self) -> int:
+        """Tokens sampled for *active* slots."""
+        return int(self._c("serving_decode_tokens_total"))
+
+    @property
+    def slot_steps(self) -> int:
+        """decode_steps * num_slots (capacity offered)."""
+        return int(self._c("serving_slot_steps_total"))
+
+    @property
+    def prefill_s(self) -> float:
+        return self._c("serving_prefill_seconds_total")
+
+    @property
+    def decode_s(self) -> float:
+        return self._c("serving_decode_seconds_total")
+
     # Prefix cache: prompt tokens satisfied from published pages vs all
     # prompt tokens admitted (a preempted request's resume counts again).
-    prefix_hit_tokens: int = 0
-    prefix_prompt_tokens: int = 0
-    cow_copies: int = 0  # copy-on-write page copies performed
-    preemptions: int = 0  # prefilling requests evicted back to the queue
+    # The scheduler's counters are the authority; gauges mirror them.
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return int(self._m.gauge("serving_prefix_hit_tokens").value)
+
+    @property
+    def prefix_prompt_tokens(self) -> int:
+        return int(self._m.gauge("serving_prefix_prompt_tokens").value)
+
+    @property
+    def cow_copies(self) -> int:
+        """Copy-on-write page copies performed."""
+        return int(self._c("serving_cow_copies_total"))
+
+    @property
+    def preemptions(self) -> int:
+        """Prefilling requests evicted back to the queue."""
+        return int(self._m.gauge("serving_preemptions").value)
+
     # Speculative decoding: verify rounds run, drafts fielded, drafts the
     # rejection sampler accepted.
-    spec_steps: int = 0
-    spec_drafted: int = 0
-    spec_accepted: int = 0
+    @property
+    def spec_steps(self) -> int:
+        return int(self._c("serving_spec_steps_total"))
+
+    @property
+    def spec_drafted(self) -> int:
+        return int(self._c("serving_spec_drafted_total"))
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._c("serving_spec_accepted_total"))
 
     @property
     def utilization(self) -> float:
@@ -180,12 +247,21 @@ class Server:
     def __init__(self, model, params, config: Optional[ServerConfig] = None, *,
                  engine=None, backend: Optional[str] = None, seed: int = 0,
                  spec: Optional[SpecConfig] = None, draft_model=None,
-                 draft_params=None):
+                 draft_params=None, tracer=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 profiler: Optional[StepProfiler] = None):
         # None sentinel, NOT a default instance: a module-level default
         # would be one shared object evaluated at import time, bleeding any
         # mutation between servers.
         if config is None:
             config = ServerConfig()
+        # Observability: tracer defaults to the zero-overhead NullTracer
+        # (hot paths gate on tracer.enabled before building event args);
+        # the metrics registry is always on — it IS the stats store.
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.profiler = profiler if profiler is not None else StepProfiler()
+        self._bind_metrics()
         if not model.supports_cb():
             raise NotImplementedError(
                 f"{model.cfg.name}: continuous batching covers decoder-only "
@@ -234,14 +310,68 @@ class Server:
                     draft_model, draft_params, num_slots=config.num_slots,
                     page_size=config.page_size, max_seq_len=config.max_seq_len,
                     k=spec.k, draft_chunk=spec.draft_chunk, backend=backend,
+                    metrics=self.metrics,
                 )
             else:
-                self.drafter = NgramDrafter(k=spec.k, ngram_n=spec.ngram_n)
+                self.drafter = NgramDrafter(k=spec.k, ngram_n=spec.ngram_n,
+                                            metrics=self.metrics)
             self.verifier = Verifier(
                 model, page_size=config.page_size, engine=engine,
-                backend=backend,
+                backend=backend, metrics=self.metrics,
             )
         self._fresh_state()
+
+    def _bind_metrics(self) -> None:
+        """Resolve the registry handles the step loop increments. Names
+        are the public metric surface (DESIGN.md, Observability); handles
+        survive ``metrics.reset()`` (metrics zero in place)."""
+        m = self.metrics
+        self._c_prefill_calls = m.counter(
+            "serving_prefill_calls_total", "prefill step dispatches")
+        self._c_prefill_tokens = m.counter(
+            "serving_prefill_tokens_total", "valid prompt tokens prefilled")
+        self._c_prefill_s = m.counter(
+            "serving_prefill_seconds_total", "wall seconds in prefill steps")
+        self._c_decode_steps = m.counter(
+            "serving_decode_steps_total", "decode/spec rounds run")
+        self._c_decode_tokens = m.counter(
+            "serving_decode_tokens_total", "tokens sampled for active slots")
+        self._c_decode_s = m.counter(
+            "serving_decode_seconds_total", "wall seconds in decode rounds")
+        self._c_slot_steps = m.counter(
+            "serving_slot_steps_total", "decode lane-steps offered")
+        self._c_cow = m.counter(
+            "serving_cow_copies_total", "copy-on-write page copies")
+        self._c_spec_steps = m.counter(
+            "serving_spec_steps_total", "speculative verify rounds")
+        self._c_spec_drafted = m.counter(
+            "serving_spec_drafted_total", "draft tokens fielded")
+        self._c_spec_accepted = m.counter(
+            "serving_spec_accepted_total", "draft tokens accepted")
+        self._g_prefix_hit = m.gauge(
+            "serving_prefix_hit_tokens",
+            "prompt tokens served from the prefix cache (scheduler mirror)")
+        self._g_prefix_prompt = m.gauge(
+            "serving_prefix_prompt_tokens",
+            "prompt tokens admitted (scheduler mirror)")
+        self._g_preemptions = m.gauge(
+            "serving_preemptions", "preemptions (scheduler mirror)")
+        self._h_ttft = m.histogram(
+            "serving_ttft_seconds", help="submit -> first token, queue incl.")
+        self._h_itl = m.histogram(
+            "serving_inter_token_seconds",
+            help="gap between a request's consecutive emitted tokens")
+        self._h_queue_wait = m.histogram(
+            "serving_queue_wait_seconds",
+            help="enqueue (submit or preemption) -> admission")
+        self._h_chunk = m.histogram(
+            "serving_prefill_chunk_seconds", help="one prefill step")
+        self._h_decode_step = m.histogram(
+            "serving_decode_step_seconds",
+            help="one decode round over all slots (incl. sampling sync)")
+        self._h_acc_round = m.histogram(
+            "serving_spec_accepted_per_round", bounds=list(range(33)),
+            help="accepted drafts per decoding row per verify round")
 
     # -- pool sizing -------------------------------------------------------
     def _reserve_tokens_cap(self) -> Optional[int]:
@@ -276,23 +406,36 @@ class Server:
             num_pages=self._resolved_num_pages(), page_size=cfg.page_size,
             pages_per_slot=cfg.pages_per_slot, pools=pools,
         )
+        # Warmup accounting: metrics and trace state reset with the rest of
+        # the serving state — counters from compile/warmup runs (including
+        # the spec counters feeding acceptance_rate) must never leak into a
+        # timed run's report. The profiler deliberately survives: its
+        # first-call-per-shape memory is what keeps compile attributed to
+        # warmup rather than to the first post-reset step.
+        self.metrics.reset()
+        self.tracer.reset()
         self.scheduler = Scheduler(
             num_slots=cfg.num_slots, pool=self.cache.allocator,
             pages_per_slot=cfg.pages_per_slot, max_seq_len=cfg.max_seq_len,
             token_budget=cfg.token_budget,
             kv_reserve_tokens=self._reserve_tokens_cap(),
             prefix_cache=self.prefix_cache, preemption=cfg.preemption,
-            aging_steps=cfg.aging_steps,
+            aging_steps=cfg.aging_steps, metrics=self.metrics,
         )
-        self.stats = ServerStats()
+        self.stats = ServerStats(self.metrics)
         self.results: dict[int, Request] = {}
+        # Slot -> running Request mirror (server-side: lets _on_preempt
+        # attribute the evicted slot back to its request for tracing).
+        self._slot_req: dict[int, Request] = {}
         self._key = jax.random.PRNGKey(self.seed)
         if getattr(self, "drafter", None) is not None:
             self.drafter.reset()
 
     def reset(self) -> None:
         """Drop all serving state (keeps compiled steps and the pools —
-        stale K/V and state rows are never read back as valid)."""
+        stale K/V and state rows are never read back as valid). Metrics
+        and trace events reset too; the step profiler's compile/steady
+        attribution survives (see ``_fresh_state``)."""
         self._fresh_state(pools=self.cache.pools)
 
     # -- request intake ----------------------------------------------------
@@ -305,7 +448,13 @@ class Server:
             sampling=sampling, eos_id=eos_id, priority=priority,
             spec_k=spec_k,
         ))
-        req.t_submit = time.perf_counter()
+        req.t_submit = req.t_queued = time.perf_counter()
+        t = self.tracer
+        if t.enabled:
+            t.begin(PID_REQUESTS, req.rid, "request",
+                    rid=req.rid, prompt_len=req.prompt_len,
+                    max_new_tokens=req.max_new_tokens, priority=priority)
+            t.begin(PID_REQUESTS, req.rid, "queued")
         return req
 
     # -- the step loop -----------------------------------------------------
@@ -317,11 +466,11 @@ class Server:
         events: list[TokenEvent] = []
         for req in self.scheduler.admit(on_preempt=self._on_preempt):
             self._install(req)
-        # The scheduler's counters are the single authority; stats mirrors
-        # them for reporting.
-        self.stats.prefix_hit_tokens = self.scheduler.prefix_hit_tokens
-        self.stats.prefix_prompt_tokens = self.scheduler.prefix_prompt_tokens
-        self.stats.preemptions = self.scheduler.preemptions
+        # The scheduler's counters are the single authority; the registry
+        # gauges mirror them for reporting/exposition.
+        self._g_prefix_hit.set(self.scheduler.prefix_hit_tokens)
+        self._g_prefix_prompt.set(self.scheduler.prefix_prompt_tokens)
+        self._g_preemptions.set(self.scheduler.preemptions)
         for req in list(self.scheduler.running.values()):
             if req.prefilling:
                 self._prefill_advance(req, events)
@@ -380,19 +529,39 @@ class Server:
 
     def _on_preempt(self, slot: int) -> None:
         """Scheduler evicted this slot's request: NULL its device page-table
-        row (its pages may now belong to someone else or sit free)."""
+        row (its pages may now belong to someone else or sit free), and
+        re-open the victim's queued span."""
         self.cache.reset_slot(slot)
+        req = self._slot_req.pop(slot, None)
+        if req is not None:
+            req.t_queued = time.perf_counter()
+            t = self.tracer
+            if t.enabled:
+                t.instant(PID_REQUESTS, req.rid, "preempted",
+                          prefilled=req.prefilled, slot=slot)
+                t.begin(PID_REQUESTS, req.rid, "queued")
 
     def _install(self, req: Request) -> None:
         """Wire a freshly admitted request into the device state: mirror its
         prefix-matched pages, run the copy-on-write page copies, and start
         its committed length at the cached prefix."""
+        now = time.perf_counter()
+        req.t_admit = now
+        self._h_queue_wait.observe(now - req.t_queued)
+        self._slot_req[req.slot] = req
+        t = self.tracer
+        if t.enabled:
+            t.end(PID_REQUESTS, req.rid, "queued")
+            t.instant(PID_REQUESTS, req.rid, "admitted", slot=req.slot,
+                      prefix_hit_tokens=req.cached_tokens,
+                      cow_copies=len(req.pending_copies),
+                      preemptions=req.preemptions)
         self._mirror_pages(req, list(enumerate(req.pages)))
         for src, dst in req.pending_copies:
             self.cache.pools = self._copy_page(
                 self.cache.pools, jnp.int32(src), jnp.int32(dst)
             )
-            self.stats.cow_copies += 1
+            self._c_cow.inc()
         req.pending_copies = []
         self.cache.seq_lens[req.slot] = req.prefilled
 
@@ -418,10 +587,12 @@ class Server:
             n = req.prompt_len - start
             tb = cfg.bucket(n)
             prefill = self._prefill_chunk if start > 0 else self._prefill_full
+            kind = "prefill_chunk" if start > 0 else "prefill_full"
         else:
             n = min(cfg.prefill_chunk, req.prompt_len - start)
             tb = cfg.prefill_chunk
             prefill = self._prefill_chunk
+            kind = "prefill_chunk"
         if self.profile.needs_kv_pages:
             self._mirror_pages(req, self.scheduler.ensure_pages(req, start + n))
         toks = np.zeros((1, tb), np.int32)
@@ -429,6 +600,12 @@ class Server:
         # The StateStore mirror is the single source of truth for the row
         # (kept in sync by _mirror_pages / clear_pages / reset_slot).
         page_row = self.cache.page_table[req.slot]
+        t = self.tracer
+        if t.enabled:
+            t.begin(PID_REQUESTS, req.rid, "prefill_chunk",
+                    start=start, tokens=n)
+            t.begin(PID_DEVICE, DEVICE_TID, kind, rid=req.rid,
+                    slot=req.slot, start=start, tokens=n, bucket=tb)
         t0 = time.perf_counter()
         logits, pools = prefill(
             self.params, jnp.asarray(toks), self.cache.pools,
@@ -436,14 +613,20 @@ class Server:
             jnp.int32(n),
         )
         jax.block_until_ready(logits)
-        self.stats.prefill_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if t.enabled:
+            t.end(PID_DEVICE, DEVICE_TID, kind)
+            t.end(PID_REQUESTS, req.rid, "prefill_chunk")
+        self._c_prefill_s.inc(dt)
+        self._h_chunk.observe(dt)
+        self.profiler.record(kind, tb, dt)
         self.cache.pools = pools
         req.prefilled += n
         self.cache.seq_lens[req.slot] = req.prefilled
         self.scheduler.publish_prefix(req)
         self._recycle_window(req)
-        self.stats.prefill_calls += 1
-        self.stats.prefill_tokens += n
+        self._c_prefill_calls.inc()
+        self._c_prefill_tokens.inc(n)
         if req.prefilled == req.prompt_len:
             sp = stack_params([req.sampling])
             tok = self._sample(logits, self._next_key(), **sp)
@@ -466,6 +649,10 @@ class Server:
             tokens[slot, 0] = req.out_tokens[-1]
             active[slot] = True
             params_list[slot] = req.sampling
+        t = self.tracer
+        if t.enabled:
+            t.begin(PID_DEVICE, DEVICE_TID, "decode",
+                    slots=n, decoding=len(decoding))
         t0 = time.perf_counter()
         logits, pools = self._decode(
             self.params, jnp.asarray(tokens), self.cache.pools,
@@ -474,11 +661,16 @@ class Server:
         )
         sp = stack_params(params_list)
         toks = np.asarray(self._sample(logits, self._next_key(), **sp))
-        self.stats.decode_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if t.enabled:
+            t.end(PID_DEVICE, DEVICE_TID, "decode")
+        self._c_decode_s.inc(dt)
+        self._h_decode_step.observe(dt)
+        self.profiler.record("decode", n, dt)
         self.cache.pools = pools
-        self.stats.decode_steps += 1
-        self.stats.slot_steps += n
-        self.stats.decode_tokens += len(decoding)
+        self._c_decode_steps.inc()
+        self._c_slot_steps.inc(n)
+        self._c_decode_tokens.inc(len(decoding))
         for slot, req in decoding:
             self.cache.seq_lens[slot] += 1
             self._recycle_window(req)
@@ -518,10 +710,17 @@ class Server:
             active[slot] = True
             contexts[slot] = req.prompt + req.out_tokens
             params_list[slot] = req.sampling
+        t = self.tracer
+        if t.enabled:
+            t.begin(PID_DEVICE, DEVICE_TID, "spec_round",
+                    slots=n, decoding=len(decoding), k=spec.k)
+            t.begin(PID_DEVICE, DEVICE_TID, "draft")
         t0 = time.perf_counter()
         proposal = self.drafter.propose(
             contexts, want, self._next_key(), params_list,
         )
+        if t.enabled:
+            t.end(PID_DEVICE, DEVICE_TID, "draft")
         k_eff = np.minimum(want, proposal.counts)
         lengths = np.where(active, k_eff + 1, 0).astype(np.int32)
         tokens = np.zeros((n, width), np.int32)
@@ -538,6 +737,9 @@ class Server:
         seq_lens_dev = jnp.asarray(self.cache.seq_lens)
         page_table_dev = jnp.asarray(self.cache.page_table)
         active_dev = jnp.asarray(active)
+        if t.enabled:
+            t.begin(PID_DEVICE, DEVICE_TID, "verify",
+                    width=width, rows=len(decoding))
         logits, pools = self.verifier.verify(
             self.params, jnp.asarray(tokens), self.cache.pools,
             page_table_dev, seq_lens_dev, jnp.asarray(lengths), active_dev,
@@ -548,6 +750,9 @@ class Server:
         )
         out = np.asarray(out)
         acc = np.asarray(acc)
+        if t.enabled:
+            t.end(PID_DEVICE, DEVICE_TID, "verify")
+            t.begin(PID_DEVICE, DEVICE_TID, "commit")
         if self.verifier.needs_state_commit:
             commit_lengths = np.where(active, acc + 1, 0).astype(np.int32)
             pools = self.verifier.commit_state(
@@ -555,29 +760,45 @@ class Server:
                 seq_lens_dev, jnp.asarray(commit_lengths), active_dev,
             )
         jax.block_until_ready(pools)
-        self.stats.decode_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if t.enabled:
+            t.end(PID_DEVICE, DEVICE_TID, "commit")
+            t.end(PID_DEVICE, DEVICE_TID, "spec_round")
+        self._c_decode_s.inc(dt)
+        self._h_decode_step.observe(dt)
+        self.profiler.record("spec_round", n, dt)
         self.cache.pools = pools
-        self.stats.decode_steps += 1
-        self.stats.slot_steps += n
-        self.stats.spec_steps += 1
+        self._c_decode_steps.inc()
+        self._c_slot_steps.inc(n)
+        self._c_spec_steps.inc()
         for slot, req in decoding:
             a = int(acc[slot])
-            self.stats.spec_drafted += int(k_eff[slot])
-            self.stats.spec_accepted += a
+            self._c_spec_drafted.inc(int(k_eff[slot]))
+            self._c_spec_accepted.inc(a)
+            self._h_acc_round.observe(a)
+            req.spec_accepted += a
             emitted = 0
             for j in range(a + 1):
                 self._commit(req, int(out[slot, j]), events)
                 emitted += 1
                 if req.finish_reason is not None:
                     break  # accepted tokens past EOS are discarded
-            self.stats.decode_tokens += emitted
+            self._c_decode_tokens.inc(emitted)
             if req.finish_reason is None:
                 self.cache.seq_lens[slot] += a + 1
                 self._recycle_window(req)
 
     def _commit(self, req: Request, token: int, events: list[TokenEvent]) -> None:
+        now = time.perf_counter()
+        t = self.tracer
         if req.t_first_token is None:
-            req.t_first_token = time.perf_counter()
+            req.t_first_token = now
+            self._h_ttft.observe(now - req.t_submit)
+            if t.enabled:
+                t.begin(PID_REQUESTS, req.rid, "decode")
+        elif req.t_last_token is not None:
+            self._h_itl.observe(now - req.t_last_token)
+        req.t_last_token = now
         finished = self.scheduler.commit(req, token)
         events.append(TokenEvent(
             rid=req.rid, token=token, index=req.num_generated - 1,
@@ -585,11 +806,22 @@ class Server:
         ))
         if finished:
             slot = req.slot
+            req.t_finish = now
             self.scheduler.finish(req)
             self.cache.reset_slot(slot)
             if self.drafter is not None:
                 self.drafter.release_slot(slot)
             self.results[req.rid] = req
+            self._slot_req.pop(slot, None)
+            if t.enabled:
+                t.instant(PID_REQUESTS, req.rid, "finished",
+                          finish_reason=req.finish_reason,
+                          generated=req.num_generated)
+                t.end(PID_REQUESTS, req.rid, "decode")
+                t.end(PID_REQUESTS, req.rid, "request",
+                      prefix_hit_tokens=req.cached_tokens,
+                      spec_accepted=req.spec_accepted,
+                      generated=req.num_generated)
 
 
 # -- static-batch reference path ---------------------------------------------

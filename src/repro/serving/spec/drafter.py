@@ -23,6 +23,7 @@ exactly the tokens the target actually committed.
 """
 from __future__ import annotations
 
+import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -32,6 +33,17 @@ import numpy as np
 from repro.serving.cache import StateStore
 from repro.serving.sampling import sample_logits, stack_params
 from repro.training import make_paged_serve_steps, make_spec_verify_steps
+
+
+def _draft_histogram(metrics):
+    """Per-round draft wall-clock histogram, when a MetricsRegistry is
+    wired in (duck-typed: no repro.obs import on the spec hot path)."""
+    if metrics is None:
+        return None
+    return metrics.histogram(
+        "serving_draft_seconds",
+        help="Wall-clock of one drafter.propose round",
+    )
 
 
 class DraftProposal(NamedTuple):
@@ -52,11 +64,13 @@ class NgramDrafter:
     the verify step.
     """
 
-    def __init__(self, *, k: int, ngram_n: int = 3):
+    def __init__(self, *, k: int, ngram_n: int = 3, metrics=None):
         self.k = k
         self.ngram_n = ngram_n
+        self._h_draft = _draft_histogram(metrics)
 
     def propose(self, contexts, want, key, params_list) -> DraftProposal:
+        t0 = time.perf_counter()
         n_slots = len(want)
         tokens = np.zeros((n_slots, self.k), np.int32)
         counts = np.zeros((n_slots,), np.int32)
@@ -67,6 +81,8 @@ class NgramDrafter:
             cont = self._lookup(hist, m)
             counts[slot] = len(cont)
             tokens[slot, : len(cont)] = cont
+        if self._h_draft is not None:
+            self._h_draft.observe(time.perf_counter() - t0)
         return DraftProposal(tokens=tokens, counts=counts, logits=None)
 
     def _lookup(self, hist, m: int) -> list[int]:
@@ -100,7 +116,8 @@ class ModelDrafter:
 
     def __init__(self, model, params, *, num_slots: int, page_size: int,
                  max_seq_len: int, k: int, draft_chunk: int = 16,
-                 engine=None, backend: Optional[str] = None):
+                 engine=None, backend: Optional[str] = None, metrics=None):
+        self._h_draft = _draft_histogram(metrics)
         if not model.supports_cb():
             raise NotImplementedError(
                 f"{model.cfg.name}: drafter must be a decoder-only family"
@@ -158,6 +175,7 @@ class ModelDrafter:
         want: (S,) drafts requested per row; params_list: per-slot
         SamplingParams the drafts are drawn with (so q is the distribution
         the rejection sampler assumes). Returns a fixed-shape proposal."""
+        t0 = time.perf_counter()
         store = self.store
         n_slots = store.num_slots
         k = self.k
@@ -194,10 +212,11 @@ class ModelDrafter:
             tokens[:, i] = cur
         store.pools = snapshot  # roll back every draft-time write
         counts = np.where(drafting, np.minimum(want, k), 0).astype(np.int32)
-        return DraftProposal(
-            tokens=tokens, counts=counts,
-            logits=jnp.stack(logits_per_pos, axis=1),
-        )
+        logits_out = jnp.stack(logits_per_pos, axis=1)
+        if self._h_draft is not None:
+            jax.block_until_ready(logits_out)
+            self._h_draft.observe(time.perf_counter() - t0)
+        return DraftProposal(tokens=tokens, counts=counts, logits=logits_out)
 
     def _replay(self, contexts) -> jnp.ndarray:
         """Catch the drafter up on committed tokens it has not consumed yet

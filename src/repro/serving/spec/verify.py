@@ -20,6 +20,7 @@ orchestration:
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -30,7 +31,12 @@ from repro.training import make_spec_verify_steps
 
 class Verifier:
     def __init__(self, model, *, page_size: int, engine=None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, metrics=None):
+        # Duck-typed MetricsRegistry (no repro.obs import on the hot path).
+        self._h_verify = None if metrics is None else metrics.histogram(
+            "serving_verify_seconds",
+            help="Wall-clock of one fixed-shape verify step",
+        )
         verify_step, commit_step = make_spec_verify_steps(
             model, page_size=page_size, engine=engine, backend=backend,
         )
@@ -52,9 +58,16 @@ class Verifier:
     def verify(self, params, tokens, pools, page_table, seq_lens, lengths,
                active):
         """One fixed-shape verify step; returns (logits (S, T, V), pools)."""
-        return self._verify(
+        t0 = time.perf_counter()
+        logits, pools = self._verify(
             params, tokens, pools, page_table, seq_lens, lengths, active,
         )
+        if self._h_verify is not None:
+            # The sync costs nothing real: the caller's rejection sample
+            # consumes these logits on the host within the same round.
+            jax.block_until_ready(logits)
+            self._h_verify.observe(time.perf_counter() - t0)
+        return logits, pools
 
     def sample(self, target_logits, draft_tokens, draft_logits, key,
                sampling, lengths, active):

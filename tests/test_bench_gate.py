@@ -27,6 +27,11 @@ BASELINE = _doc([
     {"name": "serving/a/ttft_ms", "ttft_p50_ms": 12.0},  # not a gate field
 ])
 
+# Lower-is-better (latency ceiling) baseline: itl fields gate the other way.
+CEILING_BASELINE = _doc([
+    {"name": "serving/a/itl_ms", "itl_p50_ms": 10.0, "itl_p95_ms": 20.0},
+])
+
 
 def test_gate_passes_at_and_above_floor():
     cur = _doc([
@@ -68,6 +73,48 @@ def test_gate_tolerance_knob():
     assert len(compare_rows(cur, BASELINE, tolerance=0.1)) == 2
 
 
+def test_lower_gate_passes_at_and_below_ceiling():
+    cur = _doc([
+        # Exactly +15% on p50, well under on p95: both pass.
+        {"name": "serving/a/itl_ms", "itl_p50_ms": 11.5, "itl_p95_ms": 3.0},
+    ])
+    assert compare_rows(cur, CEILING_BASELINE) == []
+
+
+def test_lower_gate_fails_above_ceiling():
+    cur = _doc([
+        {"name": "serving/a/itl_ms", "itl_p50_ms": 11.6, "itl_p95_ms": 40.0},
+    ])
+    failures = compare_rows(cur, CEILING_BASELINE)
+    assert len(failures) == 2
+    assert any("itl_p50_ms" in f and ">" in f for f in failures)
+    assert any("itl_p95_ms" in f for f in failures)
+
+
+def test_lower_gate_fails_on_missing_field():
+    cur = _doc([
+        {"name": "serving/a/itl_ms", "itl_p50_ms": 1.0},  # p95 gone
+    ])
+    failures = compare_rows(cur, CEILING_BASELINE)
+    assert len(failures) == 1 and "itl_p95_ms" in failures[0]
+
+
+def test_label_names_the_baseline_file_in_failures():
+    cur = _doc([
+        {"name": "serving/a/decode_tok_s", "tok_s": 1.0},
+        {"name": "serving/a/utilization", "utilization": 0.8},
+        {"name": "serving/a/itl_ms", "itl_p50_ms": 99.0, "itl_p95_ms": 1.0},
+    ])
+    base = _doc(BASELINE["sections"]["serving"]
+                + CEILING_BASELINE["sections"]["serving"])
+    failures = compare_rows(cur, base, label="benchmarks/baseline_smoke.json")
+    assert failures and all(
+        "[vs benchmarks/baseline_smoke.json]" in f for f in failures
+    )
+    # Without a label the messages keep their original shape.
+    assert all("[vs" not in f for f in compare_rows(cur, base))
+
+
 def test_committed_baseline_is_well_formed():
     """The checked-in baseline must parse and gate at least the kernel-decode
     throughput row (the PR 6 anchor point)."""
@@ -76,8 +123,15 @@ def test_committed_baseline_is_well_formed():
             / "benchmarks" / "baseline_smoke.json")
     )
     rows = [r for rs in base["sections"].values() for r in rs]
+    all_gate_fields = (tuple(bench_common.GATE_FIELDS)
+                       + tuple(bench_common.LOWER_GATE_FIELDS))
     gated = {r["name"] for r in rows
-             if any(r.get(f) is not None for f in bench_common.GATE_FIELDS)}
+             if any(r.get(f) is not None for f in all_gate_fields)}
     assert "serving/attention/kernel_decode/decode_tok_s" in gated
+    # The itl latency ceilings must be curated in (satellite of the
+    # observability PR): they catch a per-token sync regression tok/s
+    # floors discounted for CI noise would miss.
+    assert "serving/attention/continuous/itl_ms" in gated
+    assert "serving/hybrid/continuous/itl_ms" in gated
     # An empty current run must fail on every gated row.
     assert len(compare_rows(_doc([]), base)) == len(gated)
