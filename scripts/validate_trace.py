@@ -7,10 +7,13 @@ Checks, in file (= emission) order:
 - the document is ``{"traceEvents": [...]}`` and every event has the
   required keys (name/ph/pid/tid/ts) with a known phase;
 - per (pid, tid) track, timestamps are monotonically non-decreasing —
-  JsonTracer emits B/E spans at entry/exit in real time, so any
-  out-of-order event means a broken clock or a hand-edited file;
+  JsonTracer emits B/E spans at entry/exit in real time, and the async
+  engine's "in flight" track emits its X (complete) events in FIFO
+  harvest order with ts backdated to dispatch, which is also monotone —
+  so any out-of-order event means a broken clock or a hand-edited file;
 - B/E span nesting is well-formed per track (every E matches the name on
-  top of the open-span stack; nothing is left open at EOF);
+  top of the open-span stack; nothing is left open at EOF); X events
+  carry their own duration (``dur`` >= 0) and do not nest;
 - every request track that carries a "finished" instant has a complete
   span chain: a closed "request" span containing at least one "queued"
   span, at least one "prefill_chunk" span, and a closed "decode" span.
@@ -76,7 +79,14 @@ def validate_events(events: list[dict]) -> list[str]:
                     f"on track pid={track[0]} tid={track[1]}"
                 )
             last_ts[track] = ts
-        if ph == "B":
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(
+                    f"event {i} ({ev['name']!r}): X phase needs a "
+                    f"non-negative numeric 'dur', got {dur!r}"
+                )
+        elif ph == "B":
             stacks.setdefault(track, []).append(ev["name"])
         elif ph == "E":
             stack = stacks.setdefault(track, [])

@@ -71,6 +71,20 @@ _CHUNK_HEURISTIC = {
     2: (256, 128),
     4: (256, 128),
 }
+# Batched multi-slot prefill GEMMs: M = P x chunk for P prefilling slots
+# packed into one (P, chunk) step (P bucketed to {1,2,4,8}, chunks 16-64),
+# so M runs past the 64-row chunk ceiling up to 512. These are mid-size
+# problems — big enough that a full 128-row M tile stops being padding
+# waste, small enough that the training table's balanced tiles leave VMEM
+# idle — so the M tile caps at 128 and the K tile sits between the chunk
+# and training depths.
+_BATCH_PREFILL_M = 512
+# (bk, bn) per storage byte-width for the batched-prefill table.
+_BATCH_PREFILL_HEURISTIC = {
+    1: (384, 128),
+    2: (192, 128),
+    4: (192, 128),
+}
 # VMEM budget for one grid step's working set (x, w, y/out, acc tiles).
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -127,6 +141,13 @@ AUTOTUNE_CANDIDATES = (
     (9, 128, 384),
     (12, 128, 384),
     (16, 128, 384),
+    # Batched multi-slot prefill (M = P x chunk, 64 < M <= 512): 128-cap M
+    # tiles at the batched table's K depths, plus the neighbours the
+    # heuristic rejects (sub-128 M splits, a deeper fp8 K).
+    (96, 128, 192),
+    (128, 128, 192),
+    (128, 128, 384),
+    (256, 128, 128),
 )
 
 
@@ -203,6 +224,18 @@ def heuristic_block_sizes(
         # grid, K tile deepened into the VMEM a 128-row tile would waste.
         bk, bn = _CHUNK_HEURISTIC.get(itemsize, (256, 128))
         bm = _ceil_to(m, sub)
+        while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
+            bk //= 2
+        bm, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)
+        return bm, _ceil_to(bn, LANE), _ceil_to(bk, sub)
+    if m <= _BATCH_PREFILL_M:
+        # Batched-prefill table: M tile = min(sublane-rounded M, 128) —
+        # a (P, chunk) step of, say, 4x48 rows tiles as 2 grid steps of
+        # 96 rows rather than padding to 128x2 or falling into the
+        # training table's shallower K. The K tile sits between the chunk
+        # and training depths (bk_training <= bk_batched <= bk_chunk).
+        bk, bn = _BATCH_PREFILL_HEURISTIC.get(itemsize, (192, 128))
+        bm = min(_ceil_to(m, sub), 128)
         while _vmem_bytes(bm, bn, bk, itemsize) > _VMEM_BUDGET_BYTES and bk > sub:
             bk //= 2
         bm, bn, bk = clamp_blocks(bm, bn, bk, m, n, k, itemsize)

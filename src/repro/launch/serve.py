@@ -56,6 +56,15 @@ def main(argv=None):
     ap.add_argument("--chunked-prefill", type=int, default=0, metavar="N",
                     help="split prompts into N-token chunks interleaved "
                          "with decode steps (0 = whole-prompt prefill)")
+    ap.add_argument("--async-depth", type=int, default=0, metavar="D",
+                    help="dispatch up to D device steps ahead before the "
+                         "host blocks at the stream boundary (0 = "
+                         "synchronous; greedy outputs are identical at "
+                         "every depth)")
+    ap.add_argument("--prefill-batch", action="store_true",
+                    help="pack all prefilling slots into one (P, chunk) "
+                         "jitted step, P bucketed to {1,2,4,8}; requires "
+                         "--chunked-prefill")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share published prompt pages across requests "
                          "(refcounted, copy-on-write); the workload then "
@@ -191,6 +200,7 @@ def main(argv=None):
             prefill_bucket=min(32, max(8, args.prompt_len)),
             prefill_chunk=args.chunked_prefill or None,
             prefix_cache=args.prefix_cache, preemption=args.preempt,
+            async_depth=args.async_depth, prefill_batch=args.prefill_batch,
         ),
         engine=eng, seed=args.seed, spec=spec,
         draft_model=draft_model, draft_params=draft_params,
@@ -204,6 +214,10 @@ def main(argv=None):
     if args.prefix_cache and not server.prefix_cache:
         print(f"note: prefix cache disabled — {cfg.name} keeps recurrent "
               "state rows (cached pages cannot replace their updates)")
+    if spec is not None and args.async_depth:
+        print("note: --async-depth is inert under speculative decoding — "
+              "spec rounds are host-synchronous, the dispatch window "
+              "collapses to 0")
     if args.preempt and not args.chunked_prefill:
         print("note: --preempt is inert without --chunked-prefill — "
               "whole-prompt mode fully prefills a request in the step it "

@@ -576,23 +576,49 @@ class Transformer:
         return {"units": units, "rem": rem}
 
     def prefill_cb(self, params, tokens, pools, page_row, slot, start, length,
-                   *, page_size: int, chunked: bool = False,
+                   *, page_size: int, chunked: bool = False, active=None,
                    engine: Engine | None = None):
-        """One prefill chunk for one slot of the StateStore.
+        """One prefill chunk for one slot of the StateStore — or, in the
+        multi-row (batched) form, one chunk for each of P slots at once.
 
-        tokens: (1, Tb) right-padded chunk; page_row: (P,) the slot's page
-        ids; slot: () state row to read/commit; start: () absolute position
-        of the chunk's first token (start == 0 resets recurrent state rows —
-        that is how a recycled slot forgets its previous request); length:
-        () valid tokens in this chunk. With ``chunked`` (a trace-time
-        constant), attention also gathers the earlier chunks' K/V back
-        through the page table; recurrent layers continue from the stored
-        state row either way. Pad rows compute garbage that never escapes:
-        their keys are masked (POS_SENTINEL), their K/V writes land in the
-        null page, and masked scans skip their state updates. Returns
-        (logits (1, V) at the chunk's last valid position, new pools).
-        """
+        Single-row form — tokens: (1, Tb) right-padded chunk; page_row:
+        (P,) the slot's page ids; slot: () state row to read/commit;
+        start: () absolute position of the chunk's first token (start == 0
+        resets recurrent state rows — that is how a recycled slot forgets
+        its previous request); length: () valid tokens in this chunk. With
+        ``chunked`` (a trace-time constant), attention also gathers the
+        earlier chunks' K/V back through the page table; recurrent layers
+        continue from the stored state row either way. Pad rows compute
+        garbage that never escapes: their keys are masked (POS_SENTINEL),
+        their K/V writes land in the null page, and masked scans skip their
+        state updates. Returns (logits (1, V) at the chunk's last valid
+        position, new pools).
+
+        Multi-row form (selected by a rank-2 ``page_row``) — tokens:
+        (P, Tb); page_row: (P, Pps); slot/start/length: (P,) vectors;
+        ``active``: (P,) bool marking the real rows. Structurally this is
+        ``verify_cb`` with per-row starts: each row gathers ITS committed
+        K/V back through ITS page row, appends its fresh chunk, and commits
+        its own state row. Per-row math is identical to the single-row
+        chunked step (rows never mix), so a batched prefill is bitwise
+        equal to P serial chunked prefills under greedy sampling. Inactive
+        pad rows write the null page and must carry slot ids distinct from
+        every active row in the call — their masked state write-back
+        scatters the OLD row value, which would race a real update on a
+        shared index. Requires ``chunked=True``. Returns (logits (P, V) at
+        each row's last valid position, new pools)."""
         eng = as_engine(engine) if engine is not None else self.engine
+        if jnp.ndim(page_row) == 2:
+            if not chunked:
+                raise ValueError(
+                    "multi-row prefill_cb is always chunked (each row "
+                    "gathers its own committed K/V back through its page "
+                    "row); call with chunked=True"
+                )
+            return self._prefill_cb_batched(
+                params, tokens, pools, page_row, slot, start, length,
+                active, page_size=page_size, engine=eng,
+            )
         b, s = tokens.shape
         tok = jnp.arange(s, dtype=jnp.int32)
         pos = start + tok
@@ -627,6 +653,48 @@ class Transformer:
         )
         x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
         x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        logits = self.logits(params, x_last, engine=eng)
+        return logits[:, 0], new_pools
+
+    def _prefill_cb_batched(self, params, tokens, pools, page_rows, slots,
+                            starts, lengths, active, *, page_size: int,
+                            engine: Engine):
+        """Multi-row body of :meth:`prefill_cb` (see its docstring)."""
+        eng = engine
+        b, s = tokens.shape
+        act = jnp.ones((b,), bool) if active is None else jnp.asarray(active)
+        slots = jnp.asarray(slots)
+        starts = jnp.asarray(starts)
+        lengths = jnp.asarray(lengths)
+        tok = jnp.arange(s, dtype=jnp.int32)
+        pos = starts[:, None] + tok[None, :]  # (P, Tb) absolute positions
+        valid = (tok[None, :] < lengths[:, None]) & act[:, None]
+        page_idx = jnp.clip(pos // page_size, 0, page_rows.shape[1] - 1)
+        page = jnp.take_along_axis(page_rows, page_idx, axis=1)
+        write_idx = jnp.where(
+            valid, page * page_size + pos % page_size, 0
+        ).reshape(b * s)
+        fresh_pos = jnp.where(valid, pos, attention.POS_SENTINEL)
+        n_tok = page_rows.shape[1] * page_size
+        read_idx = (
+            page_rows[:, :, None] * page_size
+            + jnp.arange(page_size, dtype=jnp.int32)[None, None, :]
+        ).reshape(b, n_tok)
+        lpos = jnp.arange(n_tok, dtype=jnp.int32)[None]
+        read_pos = jnp.where(lpos < starts[:, None], lpos, attention.POS_SENTINEL)
+        k_pos = jnp.concatenate([read_pos, fresh_pos], axis=1)
+        paged = attention.PagedInfo(
+            write_idx=write_idx, read_idx=read_idx, k_pos=k_pos,
+            slots=slots, starts=starts, lengths=lengths, active=act,
+            chunked=True,
+        )
+        x = self.embed(params, tokens, engine=eng)
+        x, new_pools, _ = self._run_stack(
+            params["decoder"], x, pos, eng, cache=pools, paged=paged
+        )
+        x = common.norm_apply(params["final_norm"], x, self.cfg.norm)
+        last = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, last, axis=1)  # (P, 1, D)
         logits = self.logits(params, x_last, engine=eng)
         return logits[:, 0], new_pools
 

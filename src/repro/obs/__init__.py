@@ -29,6 +29,7 @@ from repro.obs.metrics import (
 )
 from repro.obs.profiler import StepProfiler, device_capture
 from repro.obs.trace import (
+    DEVICE_INFLIGHT_TID,
     DEVICE_TID,
     PID_DEVICE,
     PID_REQUESTS,
@@ -39,6 +40,7 @@ from repro.obs.trace import (
 
 __all__ = [
     "Counter",
+    "DEVICE_INFLIGHT_TID",
     "DEVICE_TID",
     "Gauge",
     "Histogram",

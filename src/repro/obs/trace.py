@@ -31,9 +31,20 @@ Track layout (see docs/DESIGN.md, Observability):
   ``prefill_chunk`` (one per chunk), and ``decode`` (first token ->
   finish), plus ``admitted`` / ``preempted`` / ``finished`` instants
   carrying prefix-hit, preemption and speculative annotations.
-- ``pid == PID_DEVICE``, ``tid == DEVICE_TID``: one span per jitted step
-  (``prefill_full`` / ``prefill_chunk`` / ``decode`` / ``spec_round``
-  with nested ``draft`` / ``verify`` / ``commit`` phases).
+- ``pid == PID_DEVICE``, ``tid == DEVICE_TID`` ("steps"): host-side span
+  per jitted-step *dispatch* (``prefill_full.dispatch`` /
+  ``prefill_chunk.dispatch`` / ``prefill_batch.dispatch`` /
+  ``decode.dispatch``, plus the synchronous ``spec_round`` with nested
+  ``draft`` / ``verify`` / ``commit`` phases). Under the async engine the
+  dispatch span covers only the host time to enqueue the device work.
+- ``pid == PID_DEVICE``, ``tid == DEVICE_INFLIGHT_TID`` ("in flight"):
+  one Chrome *complete* ("X") event per harvested step
+  (``<kind>.complete``), backdated to its dispatch time and spanning
+  dispatch -> result consumed. The gap between a dispatch span ending and
+  its complete event ending IS the overlap window dispatch-ahead buys —
+  Perfetto renders the two tracks stacked so the overlap reads directly.
+  Harvest order is FIFO in dispatch order, so this track stays
+  timestamp-monotonic even though events are emitted at harvest time.
 """
 from __future__ import annotations
 
@@ -44,6 +55,7 @@ from typing import Optional, Protocol, runtime_checkable
 PID_REQUESTS = 1
 PID_DEVICE = 2
 DEVICE_TID = 0
+DEVICE_INFLIGHT_TID = 1
 
 _PROCESS_NAMES = {PID_REQUESTS: "requests", PID_DEVICE: "device"}
 
@@ -59,6 +71,9 @@ class Tracer(Protocol):
     def end(self, pid: int, tid: int, name: str, **args) -> None: ...
 
     def instant(self, pid: int, tid: int, name: str, **args) -> None: ...
+
+    def complete(self, pid: int, tid: int, name: str, start_s: float,
+                 dur_s: float, **args) -> None: ...
 
     def reset(self) -> None: ...
 
@@ -76,6 +91,9 @@ class NullTracer:
         pass
 
     def instant(self, pid, tid, name, **args):
+        pass
+
+    def complete(self, pid, tid, name, start_s, dur_s, **args):
         pass
 
     def reset(self):
@@ -106,7 +124,12 @@ class JsonTracer:
         self.events.append({"name": "process_name", "ph": "M", "pid": pid,
                             "tid": tid, "ts": 0,
                             "args": {"name": pname}})
-        tname = f"req {tid}" if pid == PID_REQUESTS else "steps"
+        if pid == PID_REQUESTS:
+            tname = f"req {tid}"
+        elif tid == DEVICE_INFLIGHT_TID:
+            tname = "in flight"
+        else:
+            tname = "steps"
         self.events.append({"name": "thread_name", "ph": "M", "pid": pid,
                             "tid": tid, "ts": 0,
                             "args": {"name": tname}})
@@ -132,6 +155,20 @@ class JsonTracer:
               "ts": self._ts(), "s": "t"}  # thread-scoped instant
         if ev_args:
             ev["args"] = ev_args
+        self.events.append(ev)
+
+    def complete(self, pid, tid, name, start_s, dur_s, **args):
+        """One Chrome complete ("X") event with an explicit start and
+        duration — emitted after the fact, which is how the async engine
+        records a device step it only learns the extent of at harvest
+        time. ``start_s`` is a ``time.perf_counter()`` value (the same
+        clock as the tracer epoch); events before the epoch clamp to 0."""
+        self._track_meta(pid, tid)
+        ts = max(0.0, (start_s - self._t0) * 1e6)
+        ev = {"name": name, "ph": "X", "pid": int(pid), "tid": int(tid),
+              "ts": ts, "dur": max(0.0, dur_s * 1e6)}
+        if args:
+            ev["args"] = args
         self.events.append(ev)
 
     def reset(self) -> None:

@@ -1,23 +1,44 @@
 """The serving loop: jit-friendly fixed-shape steps driven by the
 continuous-batching scheduler, for every decoder-only sequence family.
 
+The stack splits in two (see ``repro.serving.engine``):
+
+- :class:`~repro.serving.engine.EngineCore` owns the device: the
+  StateStore, the jitted steps, the RNG key stream, the device-resident
+  last-token array, and the FIFO window of dispatched-but-unharvested
+  steps.
+- :class:`Server` (this module) owns the requests: scheduler, admission,
+  prompts, token commits and streaming. It *dispatches* work into the
+  engine and *harvests* results out.
+
 Layout of one ``Server.step()``:
 
   1. admit queued requests into free slots (pages + budget permitting);
-  2. advance every prefilling request by ONE prompt chunk (the whole
-     prompt when chunked prefill is off). Chunks commit KV pages and
-     recurrent state rows for that slot only; the final chunk samples the
-     request's first token. Interleaving chunks with decode steps bounds
-     how long running requests stall behind a long prompt — the software
-     analog of the paper's double-buffered tile streaming;
-  3. run ONE decode step over every slot — decoding, prefilling or free —
-     through the StateStore (gather/scatter over slot mappings, shapes
-     never change), sample one token per slot, commit the active ones,
-     recycle finished slots. Non-decoding rows write to the null page and
-     keep their state rows untouched.
+  2. dispatch one prompt chunk per prefilling request — either one
+     single-row step each, or (``prefill_batch``) every prefilling slot
+     packed into one ``(P, chunk)`` step with P bucketed to {1,2,4,8}.
+     The final chunk samples the request's first token on-device;
+  3. dispatch ONE decode step over every slot; sampled tokens merge into
+     the engine's last-token array so the *next* decode can dispatch
+     without waiting for this one;
+  4. harvest the oldest in-flight steps down to ``async_depth``: block
+     at the stream boundary, commit tokens/prefix pages, stamp
+     TTFT/inter-token marks, emit :class:`TokenEvent`s.
 
-Tokens stream out as :class:`TokenEvent`s the moment they are sampled;
-every request records submit -> first-token wall time (TTFT).
+At ``async_depth=0`` every step is harvested in the iteration that
+dispatched it — the synchronous mode — and because the dispatch sequence
+(and therefore the RNG key stream) does not depend on the depth, greedy
+outputs are bitwise identical at every depth. Host bookkeeping runs in
+two phases: *optimistic* at dispatch (page growth, seq_lens mirrors,
+per-request dispatch cursors) and *authoritative* at harvest (committed
+tokens, prefix publishing, latency stamps, finishes). An EOS the host
+only learns about at harvest may leave up to ``async_depth`` stale decode
+steps in flight; their tokens are discarded at harvest and their writes
+only ever touched the finished request's own frontier page.
+
+Tokens stream out as :class:`TokenEvent`s at harvest; every request
+records submit -> first-token wall time (TTFT) at the moment its first
+token is *consumed*, not dispatched.
 
 The static-batch path (:func:`generate_static`) lives here too: it is the
 baseline the benchmarks compare against and the single implementation behind
@@ -34,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.training import make_paged_serve_steps, make_serve_steps
+from repro.training import make_serve_steps
 from repro.obs import (
     DEVICE_TID,
     PID_DEVICE,
@@ -43,14 +64,14 @@ from repro.obs import (
     NullTracer,
     StepProfiler,
 )
-from repro.serving.cache import StateStore, copy_kv_page
+from repro.serving.engine import EngineCore
 from repro.serving.sampling import (
     GREEDY,
     SamplingParams,
     sample_logits,
     stack_params,
 )
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import RUNNING, Request, Scheduler
 from repro.serving.spec import (
     ModelDrafter,
     NgramDrafter,
@@ -89,6 +110,15 @@ class ServerConfig:
     # Admission passes a queued request waits per effective-priority level
     # gained (anti-starvation aging).
     aging_steps: int = 32
+    # Dispatch-ahead window: device steps that may be in flight before the
+    # host blocks at the stream boundary. 0 = synchronous. Greedy outputs
+    # are identical at every depth; forced to 0 while speculative decoding
+    # is active (spec rounds are host-synchronous by construction).
+    async_depth: int = 0
+    # Batched multi-slot prefill: pack every prefilling slot into one
+    # (P, prefill_chunk) jitted step, P bucketed to {1, 2, 4, 8} (clamped
+    # to num_slots). Requires prefill_chunk.
+    prefill_batch: bool = False
 
     @property
     def pages_per_slot(self) -> int:
@@ -105,7 +135,8 @@ class ServerConfig:
 
 
 class TokenEvent(NamedTuple):
-    """One streamed token: emitted by ``step()`` as soon as it is sampled."""
+    """One streamed token: emitted by ``step()`` when it is harvested —
+    the point its value is actually available on the host."""
 
     rid: int
     token: int
@@ -233,15 +264,31 @@ class ServerStats:
         return self.prefill_s + self.decode_s
 
 
-class Server:
-    """Continuous-batching inference server over the serving StateStore.
+@dataclasses.dataclass
+class _DispatchState:
+    """Per-request host cursor for work *dispatched* (vs. committed —
+    ``req.prefilled`` / ``req.out_tokens`` stay authoritative and only
+    advance at harvest). ``epoch`` snapshots ``req.preemptions`` at
+    install: a record dispatched before a preemption carries the old
+    epoch, so its harvest is recognised as stale and skipped."""
 
-    ``backend`` selects the engine's kernel backend for every GEMM *and* the
+    prefilled: int
+    generated: int
+    epoch: int
+
+
+class Server:
+    """Continuous-batching inference server over the engine's StateStore.
+
+    ``backend`` selects the kernel backend for every GEMM *and* the
     decode attention path: with ``"pallas"`` / ``"pallas_interpret"``,
     one-token decode steps dispatch to the fused paged flash-decode kernel
     (page-table walk inside the kernel, in-tile fp8 dequant); the default
     XLA backend keeps the gather + online-softmax reference path, which is
     also the CPU fallback and the parity oracle the kernel is tested against.
+
+    ``engine`` is the *compute* engine forwarded to the jitted steps;
+    ``self.engine`` is the serving :class:`EngineCore` built around it.
     """
 
     def __init__(self, model, params, config: Optional[ServerConfig] = None, *,
@@ -255,6 +302,13 @@ class Server:
         # mutation between servers.
         if config is None:
             config = ServerConfig()
+        if config.async_depth < 0:
+            raise ValueError("async_depth must be >= 0")
+        if config.prefill_batch and config.prefill_chunk is None:
+            raise ValueError(
+                "prefill_batch packs (P, prefill_chunk) steps and needs a "
+                "fixed chunk shape: set prefill_chunk"
+            )
         # Observability: tracer defaults to the zero-overhead NullTracer
         # (hot paths gate on tracer.enabled before building event args);
         # the metrics registry is always on — it IS the stats store.
@@ -279,21 +333,16 @@ class Server:
             and self.profile.needs_kv_pages
             and not self.profile.has_state_rows
         )
-        self.seed = seed
-        prefill_full, prefill_chunk, decode_step = make_paged_serve_steps(
-            model, page_size=config.page_size, engine=engine, backend=backend,
-        )
-        self._prefill_full = jax.jit(prefill_full)
-        self._prefill_chunk = jax.jit(prefill_chunk)
-        self._decode = jax.jit(decode_step)
-        self._sample = jax.jit(sample_logits)
-        ps = config.page_size
-        self._copy_page = jax.jit(
-            lambda pools, src, dst: copy_kv_page(pools, src, dst, page_size=ps)
+        self.engine = EngineCore(
+            model, params, config, self.profile, engine=engine,
+            backend=backend, seed=seed, tracer=self.tracer,
+            metrics=self.metrics, profiler=self.profiler,
         )
         # Speculative decoding: a drafter (paired model with its own
         # StateStore, or n-gram self-drafting) + the target-side verifier.
         # Passing draft_model without spec enables it at the default k.
+        # Spec rounds are host-synchronous (draft -> verify -> commit), so
+        # the dispatch window collapses to depth 0 while spec is on.
         if draft_model is not None and spec is None:
             spec = SpecConfig()
         self.spec = spec
@@ -327,11 +376,9 @@ class Server:
         survive ``metrics.reset()`` (metrics zero in place)."""
         m = self.metrics
         self._c_prefill_calls = m.counter(
-            "serving_prefill_calls_total", "prefill step dispatches")
+            "serving_prefill_calls_total", "prefill chunk advances committed")
         self._c_prefill_tokens = m.counter(
             "serving_prefill_tokens_total", "valid prompt tokens prefilled")
-        self._c_prefill_s = m.counter(
-            "serving_prefill_seconds_total", "wall seconds in prefill steps")
         self._c_decode_steps = m.counter(
             "serving_decode_steps_total", "decode/spec rounds run")
         self._c_decode_tokens = m.counter(
@@ -364,8 +411,6 @@ class Server:
         self._h_queue_wait = m.histogram(
             "serving_queue_wait_seconds",
             help="enqueue (submit or preemption) -> admission")
-        self._h_chunk = m.histogram(
-            "serving_prefill_chunk_seconds", help="one prefill step")
         self._h_decode_step = m.histogram(
             "serving_decode_step_seconds",
             help="one decode round over all slots (incl. sampling sync)")
@@ -373,39 +418,29 @@ class Server:
             "serving_spec_accepted_per_round", bounds=list(range(33)),
             help="accepted drafts per decoding row per verify round")
 
-    # -- pool sizing -------------------------------------------------------
+    # -- pool sizing (delegated to the engine) -----------------------------
     def _reserve_tokens_cap(self) -> Optional[int]:
-        """Tokens a request must keep page-resident at once, from the
-        model's pool layout. None = the full sequence."""
-        cfg, prof = self.config, self.profile
-        if not prof.needs_kv_pages:
-            return 0
-        if prof.kv_window is not None and cfg.prefill_chunk is not None:
-            # Window + one in-flight chunk + slack pages so lazy allocation
-            # ahead of recycling never outruns the reservation. Only sound
-            # under chunked prefill: whole-prompt prefill allocates every
-            # prompt page at once (recycling runs after the jitted call),
-            # so its peak demand is the full prompt, not a window.
-            return min(cfg.max_seq_len,
-                       prof.kv_window + cfg.prefill_chunk + 2 * cfg.page_size)
-        return None
+        return self.engine.reserve_tokens_cap()
 
     def _resolved_num_pages(self) -> int:
-        cfg = self.config
-        if cfg.num_pages is not None:
-            return cfg.num_pages
-        cap = self._reserve_tokens_cap()
-        per_slot = -(-min(cfg.max_seq_len, cap if cap is not None
-                          else cfg.max_seq_len) // cfg.page_size)
-        return max(cfg.num_slots * per_slot + 1, 2)
+        return self.engine.resolved_num_pages()
+
+    @property
+    def cache(self):
+        """The engine's StateStore (page tables, seq_lens, pools)."""
+        return self.engine.cache
+
+    @property
+    def seed(self) -> int:
+        """PRNG seed; lives on the engine (re-keyed on reset())."""
+        return self.engine.seed
+
+    @seed.setter
+    def seed(self, value: int) -> None:
+        self.engine.seed = value
 
     def _fresh_state(self, pools=None) -> None:
         cfg = self.config
-        self.cache = StateStore.build(
-            self.model, num_slots=cfg.num_slots,
-            num_pages=self._resolved_num_pages(), page_size=cfg.page_size,
-            pages_per_slot=cfg.pages_per_slot, pools=pools,
-        )
         # Warmup accounting: metrics and trace state reset with the rest of
         # the serving state — counters from compile/warmup runs (including
         # the spec counters feeding acceptance_rate) must never leak into a
@@ -414,11 +449,12 @@ class Server:
         # warmup rather than to the first post-reset step.
         self.metrics.reset()
         self.tracer.reset()
+        self.engine.fresh(pools=pools)
         self.scheduler = Scheduler(
             num_slots=cfg.num_slots, pool=self.cache.allocator,
             pages_per_slot=cfg.pages_per_slot, max_seq_len=cfg.max_seq_len,
             token_budget=cfg.token_budget,
-            kv_reserve_tokens=self._reserve_tokens_cap(),
+            kv_reserve_tokens=self.engine.reserve_tokens_cap(),
             prefix_cache=self.prefix_cache, preemption=cfg.preemption,
             aging_steps=cfg.aging_steps, metrics=self.metrics,
         )
@@ -427,15 +463,18 @@ class Server:
         # Slot -> running Request mirror (server-side: lets _on_preempt
         # attribute the evicted slot back to its request for tracing).
         self._slot_req: dict[int, Request] = {}
-        self._key = jax.random.PRNGKey(self.seed)
+        # rid -> dispatch cursor (see _DispatchState).
+        self._disp: dict[int, _DispatchState] = {}
         if getattr(self, "drafter", None) is not None:
             self.drafter.reset()
 
     def reset(self) -> None:
         """Drop all serving state (keeps compiled steps and the pools —
-        stale K/V and state rows are never read back as valid). Metrics
+        stale K/V and state rows are never read back as valid). In-flight
+        steps are harvested first (their events are discarded). Metrics
         and trace events reset too; the step profiler's compile/steady
         attribution survives (see ``_fresh_state``)."""
+        self._drain([])
         self._fresh_state(pools=self.cache.pools)
 
     # -- request intake ----------------------------------------------------
@@ -460,9 +499,10 @@ class Server:
     # -- the step loop -----------------------------------------------------
     def step(self) -> list[TokenEvent]:
         """One scheduler iteration: admit (mapping cached prefixes, possibly
-        preempting), advance prefills one chunk each, then one decode over
-        all slots. Returns the tokens produced (possibly empty while long
-        prompts are still chunking in)."""
+        preempting), dispatch one prefill chunk per prefilling request
+        (batched when ``prefill_batch``) and one decode over all slots,
+        then harvest in-flight steps down to ``async_depth``. Returns the
+        tokens harvested (possibly empty while work is still in flight)."""
         events: list[TokenEvent] = []
         for req in self.scheduler.admit(on_preempt=self._on_preempt):
             self._install(req)
@@ -471,26 +511,50 @@ class Server:
         self._g_prefix_hit.set(self.scheduler.prefix_hit_tokens)
         self._g_prefix_prompt.set(self.scheduler.prefix_prompt_tokens)
         self._g_preemptions.set(self.scheduler.preemptions)
-        for req in list(self.scheduler.running.values()):
-            if req.prefilling:
-                self._prefill_advance(req, events)
-        if any(r.decoding for r in self.scheduler.running.values()):
-            if self.spec is not None:
-                self._spec_decode_once(events)
+        prefilling = [req for req in self.scheduler.running.values()
+                      if self._dispatch_prefilling(req)]
+        dispatched = 0
+        if prefilling:
+            if self.config.prefill_batch:
+                dispatched += self._dispatch_prefill_batched(prefilling)
             else:
-                self._decode_once(events)
+                for req in prefilling:
+                    self._dispatch_prefill_serial(req)
+                    dispatched += 1
+        if self.spec is not None:
+            # Spec rounds are host-synchronous: drain the prefill
+            # dispatches (committing first tokens) so the round sees
+            # exactly the state the synchronous server would.
+            self._drain(events)
+            if any(r.decoding for r in self.scheduler.running.values()):
+                self._spec_decode_once(events)
+            return events
+        decoding = self._decode_candidates()
+        if decoding:
+            self._dispatch_decode(decoding)
+            dispatched += 1
+        while self.engine.num_inflight > self.config.async_depth:
+            self._harvest_one(events)
+        if not dispatched and self.engine.num_inflight:
+            # Everything admissible is already in flight: consume one
+            # result so the loop always makes progress toward drain.
+            self._harvest_one(events)
         return events
 
     def run(self) -> dict[int, Request]:
         """Drain the queue; returns {rid: finished Request}."""
         while self.scheduler.has_work():
             self.step()
+        self._drain([])  # EOS-overshoot leftovers; commits are all stale
         return dict(self.results)
 
     def stream(self):
         """Generator over TokenEvents until all submitted work finishes."""
         while self.scheduler.has_work():
             yield from self.step()
+        tail: list[TokenEvent] = []
+        self._drain(tail)
+        yield from tail
 
     def ttft_percentiles(self, qs=(50, 95)) -> Optional[tuple[float, ...]]:
         """Submit -> first-token wall seconds at the given percentiles over
@@ -520,8 +584,29 @@ class Server:
 
     # -- internals ---------------------------------------------------------
     def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
+        return self.engine.next_key()
+
+    def _gen_cap(self, req: Request) -> int:
+        """Tokens this request may generate in total. Host-predictable, so
+        length finishes never overshoot: dispatch stops exactly where
+        ``scheduler.commit`` will declare FINISH_LENGTH."""
+        return max(0, min(req.max_new_tokens,
+                          req.max_total - req.prompt_len))
+
+    def _dispatch_prefilling(self, req: Request) -> bool:
+        ds = self._disp.get(req.rid)
+        return ds is not None and ds.prefilled < req.prompt_len
+
+    def _decode_candidates(self) -> list:
+        out = []
+        for slot, req in self.scheduler.running.items():
+            ds = self._disp.get(req.rid)
+            if ds is None or ds.prefilled < req.prompt_len:
+                continue
+            if ds.generated >= self._gen_cap(req):
+                continue
+            out.append((slot, req, ds))
+        return out
 
     def _mirror_pages(self, req: Request, grown) -> None:
         for idx, page in grown:
@@ -529,11 +614,13 @@ class Server:
 
     def _on_preempt(self, slot: int) -> None:
         """Scheduler evicted this slot's request: NULL its device page-table
-        row (its pages may now belong to someone else or sit free), and
-        re-open the victim's queued span."""
+        row (its pages may now belong to someone else or sit free), drop
+        its dispatch cursor (in-flight chunks carry the old epoch and are
+        skipped at harvest), and re-open the victim's queued span."""
         self.cache.reset_slot(slot)
         req = self._slot_req.pop(slot, None)
         if req is not None:
+            self._disp.pop(req.rid, None)
             req.t_queued = time.perf_counter()
             t = self.tracer
             if t.enabled:
@@ -549,6 +636,10 @@ class Server:
         req.t_admit = now
         self._h_queue_wait.observe(now - req.t_queued)
         self._slot_req[req.slot] = req
+        self._disp[req.rid] = _DispatchState(
+            prefilled=req.prefilled, generated=len(req.out_tokens),
+            epoch=req.preemptions,
+        )
         t = self.tracer
         if t.enabled:
             t.end(PID_REQUESTS, req.rid, "queued")
@@ -558,9 +649,7 @@ class Server:
                       preemptions=req.preemptions)
         self._mirror_pages(req, list(enumerate(req.pages)))
         for src, dst in req.pending_copies:
-            self.cache.pools = self._copy_page(
-                self.cache.pools, jnp.int32(src), jnp.int32(dst)
-            )
+            self.engine.copy_page(src, dst)
             self._c_cow.inc()
         req.pending_copies = []
         self.cache.seq_lens[req.slot] = req.prefilled
@@ -574,107 +663,178 @@ class Server:
         )
         self.cache.clear_pages(req.slot, freed)
 
-    def _prefill_advance(self, req: Request, events: list[TokenEvent]) -> None:
-        """Run one prompt chunk for one slot: commit its K/V pages and
-        recurrent state row; on the final chunk, sample the first token.
-        A prefix-hit request starts at the first uncached position — its
-        chunk must gather the mapped pages' K/V back through the page
-        table, so it always takes the chunked step even when chunked
-        prefill is off (the suffix then runs as one bucketed chunk)."""
+    # -- dispatch (optimistic host state) ----------------------------------
+    def _dispatch_prefill_serial(self, req: Request) -> None:
+        """Dispatch one prompt chunk for one slot. A prefix-hit request
+        starts at the first uncached position — its chunk must gather the
+        mapped pages' K/V back through the page table, so it always takes
+        the chunked step even when chunked prefill is off (the suffix then
+        runs as one bucketed chunk)."""
         cfg = self.config
-        start = req.prefilled
+        ds = self._disp[req.rid]
+        start = ds.prefilled
         if cfg.prefill_chunk is None:
             n = req.prompt_len - start
             tb = cfg.bucket(n)
-            prefill = self._prefill_chunk if start > 0 else self._prefill_full
             kind = "prefill_chunk" if start > 0 else "prefill_full"
         else:
             n = min(cfg.prefill_chunk, req.prompt_len - start)
             tb = cfg.prefill_chunk
-            prefill = self._prefill_chunk
             kind = "prefill_chunk"
         if self.profile.needs_kv_pages:
             self._mirror_pages(req, self.scheduler.ensure_pages(req, start + n))
         toks = np.zeros((1, tb), np.int32)
         toks[0, :n] = req.prompt[start:start + n]
+        final = start + n == req.prompt_len
         # The StateStore mirror is the single source of truth for the row
-        # (kept in sync by _mirror_pages / clear_pages / reset_slot).
-        page_row = self.cache.page_table[req.slot]
-        t = self.tracer
-        if t.enabled:
-            t.begin(PID_REQUESTS, req.rid, "prefill_chunk",
-                    start=start, tokens=n)
-            t.begin(PID_DEVICE, DEVICE_TID, kind, rid=req.rid,
-                    slot=req.slot, start=start, tokens=n, bucket=tb)
-        t0 = time.perf_counter()
-        logits, pools = prefill(
-            self.params, jnp.asarray(toks), self.cache.pools,
-            jnp.asarray(page_row), jnp.int32(req.slot), jnp.int32(start),
-            jnp.int32(n),
+        # (kept in sync by _mirror_pages / clear_pages / reset_slot);
+        # copied so later host mutations can't leak into the snapshot.
+        self.engine.dispatch_prefill(
+            kind=kind, tokens=toks,
+            page_row=self.cache.page_table[req.slot].copy(),
+            slot=req.slot, start=start, n=n, bucket=tb,
+            sampling=req.sampling if final else None,
+            payload=[(req, ds.epoch, start, n, final)], rid=req.rid,
         )
-        jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        if t.enabled:
-            t.end(PID_DEVICE, DEVICE_TID, kind)
-            t.end(PID_REQUESTS, req.rid, "prefill_chunk")
-        self._c_prefill_s.inc(dt)
-        self._h_chunk.observe(dt)
-        self.profiler.record(kind, tb, dt)
-        self.cache.pools = pools
-        req.prefilled += n
-        self.cache.seq_lens[req.slot] = req.prefilled
-        self.scheduler.publish_prefix(req)
+        ds.prefilled = start + n
+        if final:
+            ds.generated += 1  # the final chunk samples the first token
+        self.cache.seq_lens[req.slot] = ds.prefilled
         self._recycle_window(req)
-        self._c_prefill_calls.inc()
-        self._c_prefill_tokens.inc(n)
-        if req.prefilled == req.prompt_len:
-            sp = stack_params([req.sampling])
-            tok = self._sample(logits, self._next_key(), **sp)
-            self._commit(req, int(tok[0]), events)
 
-    def _decode_once(self, events: list[TokenEvent]) -> None:
-        decoding = [(slot, req) for slot, req in self.scheduler.running.items()
-                    if req.decoding]
-        if self.profile.needs_kv_pages:
-            for slot, req in decoding:
+    def _dispatch_prefill_batched(self, prefilling: list) -> int:
+        """Dispatch every prefilling request's next chunk as (P, chunk)
+        steps, P bucketed to the engine's allowed set. Pad rows are
+        inactive and carry slot ids disjoint from the group's active slots:
+        an inactive row's masked state write-back scatters its slot's OLD
+        row, and XLA leaves duplicate-index scatter order unspecified — a
+        pad sharing an active row's slot could clobber the real update.
+        Buckets never exceed num_slots, so a distinct pad slot always
+        exists. Returns the number of steps dispatched."""
+        cfg = self.config
+        chunk = cfg.prefill_chunk
+        max_b = self.engine.allowed_buckets()[-1]
+        dispatched = 0
+        for i in range(0, len(prefilling), max_b):
+            group = prefilling[i:i + max_b]
+            if len(group) == 1:
+                # A single prefilling request takes the serial (1, chunk)
+                # path: the batched step's row scatter/masking machinery
+                # costs ~30% on one row for nothing (greedy outputs are
+                # identical either way).
+                self._dispatch_prefill_serial(group[0])
+                dispatched += 1
+                continue
+            p = self.engine.bucket_for(len(group))
+            toks = np.zeros((p, chunk), np.int32)
+            page_rows = np.zeros((p, cfg.pages_per_slot), np.int32)
+            slots = np.zeros((p,), np.int32)
+            starts = np.zeros((p,), np.int32)
+            lengths = np.zeros((p,), np.int32)
+            active = np.zeros((p,), bool)
+            final_mask = np.zeros((p,), bool)
+            sampling_list = [GREEDY] * p
+            rows = []
+            used = set()
+            for r, req in enumerate(group):
+                ds = self._disp[req.rid]
+                start = ds.prefilled
+                n = min(chunk, req.prompt_len - start)
+                if self.profile.needs_kv_pages:
+                    self._mirror_pages(
+                        req, self.scheduler.ensure_pages(req, start + n))
+                toks[r, :n] = req.prompt[start:start + n]
+                page_rows[r] = self.cache.page_table[req.slot]
+                slots[r] = req.slot
+                starts[r] = start
+                lengths[r] = n
+                active[r] = True
+                final = start + n == req.prompt_len
+                final_mask[r] = final
+                sampling_list[r] = req.sampling
+                used.add(req.slot)
+                rows.append((req, ds.epoch, start, n, final))
+            pad_slots = [s for s in range(cfg.num_slots) if s not in used]
+            for r in range(len(group), p):
+                slots[r] = pad_slots[0]  # pads may share a slot between them
+            self.engine.dispatch_prefill_batch(
+                tokens=toks, page_rows=page_rows, slots=slots, starts=starts,
+                lengths=lengths, active=active, final_mask=final_mask,
+                sampling_list=sampling_list, payload=rows,
+                rids=[req.rid for req in group],
+            )
+            dispatched += 1
+            for req, _, start, n, final in rows:
+                ds = self._disp[req.rid]
+                ds.prefilled = start + n
+                if final:
+                    ds.generated += 1
+                self.cache.seq_lens[req.slot] = ds.prefilled
+                self._recycle_window(req)
+        return dispatched
+
+    def _dispatch_decode(self, decoding: list) -> None:
+        n = self.config.num_slots
+        active = np.zeros((n,), bool)
+        params_list = [GREEDY] * n
+        rows = []
+        for slot, req, ds in decoding:
+            if self.profile.needs_kv_pages:
                 grown = self.scheduler.ensure_page(
                     req, int(self.cache.seq_lens[slot]))
                 if grown is not None:
                     self._mirror_pages(req, [grown])
-        n = self.cache.num_slots
-        tokens = np.zeros((n, 1), np.int32)
-        active = np.zeros((n,), bool)
-        params_list = [GREEDY] * n
-        for slot, req in decoding:
-            tokens[slot, 0] = req.out_tokens[-1]
             active[slot] = True
             params_list[slot] = req.sampling
-        t = self.tracer
-        if t.enabled:
-            t.begin(PID_DEVICE, DEVICE_TID, "decode",
-                    slots=n, decoding=len(decoding))
-        t0 = time.perf_counter()
-        logits, pools = self._decode(
-            self.params, jnp.asarray(tokens), self.cache.pools,
-            jnp.asarray(self.cache.page_table), jnp.asarray(self.cache.seq_lens),
-            jnp.asarray(active),
-        )
-        sp = stack_params(params_list)
-        toks = np.asarray(self._sample(logits, self._next_key(), **sp))
-        dt = time.perf_counter() - t0
-        if t.enabled:
-            t.end(PID_DEVICE, DEVICE_TID, "decode")
-        self._c_decode_s.inc(dt)
-        self._h_decode_step.observe(dt)
-        self.profiler.record("decode", n, dt)
-        self.cache.pools = pools
-        self._c_decode_steps.inc()
-        self._c_slot_steps.inc(n)
-        self._c_decode_tokens.inc(len(decoding))
-        for slot, req in decoding:
+            rows.append((slot, req, ds.epoch))
+        self.engine.dispatch_decode(active=active, params_list=params_list,
+                                    payload=rows)
+        for slot, req, ds in decoding:
+            ds.generated += 1
             self.cache.seq_lens[slot] += 1
             self._recycle_window(req)
-            self._commit(req, int(toks[slot]), events)
+
+    # -- harvest (authoritative commits) -----------------------------------
+    def _drain(self, events: list[TokenEvent]) -> None:
+        while self._harvest_one(events):
+            pass
+
+    def _harvest_one(self, events: list[TokenEvent]) -> bool:
+        """Consume the oldest in-flight step: commit its tokens/prefix
+        state and emit TokenEvents. Rows whose request was preempted (old
+        epoch) or already finished (EOS overshoot within the dispatch
+        window) are discarded. Returns False when nothing was in flight."""
+        res = self.engine.harvest_one()
+        if res is None:
+            return False
+        rec, toks = res
+        if rec.kind == "decode":
+            committed = 0
+            for slot, req, epoch in rec.payload:
+                if (req.status != RUNNING or req.preemptions != epoch
+                        or req.slot != slot):
+                    continue
+                self._commit(req, int(toks[slot]), events)
+                committed += 1
+            self._c_decode_steps.inc()
+            self._c_slot_steps.inc(self.config.num_slots)
+            self._c_decode_tokens.inc(committed)
+        else:
+            t = self.tracer
+            for i, (req, epoch, start, n, final) in enumerate(rec.payload):
+                if req.status != RUNNING or req.preemptions != epoch:
+                    continue
+                if t.enabled:
+                    t.begin(PID_REQUESTS, req.rid, "prefill_chunk",
+                            start=start, tokens=n)
+                    t.end(PID_REQUESTS, req.rid, "prefill_chunk")
+                req.prefilled = start + n
+                self.scheduler.publish_prefix(req)
+                self._c_prefill_calls.inc()
+                self._c_prefill_tokens.inc(n)
+                if final:
+                    self._commit(req, int(toks[i]), events)
+        return True
 
     def _spec_decode_once(self, events: list[TokenEvent]) -> None:
         """One speculative round over every decoding slot: draft k, verify
@@ -777,6 +937,7 @@ class Server:
             self._c_spec_accepted.inc(a)
             self._h_acc_round.observe(a)
             req.spec_accepted += a
+            ds = self._disp.get(req.rid)
             emitted = 0
             for j in range(a + 1):
                 self._commit(req, int(out[slot, j]), events)
@@ -785,10 +946,15 @@ class Server:
                     break  # accepted tokens past EOS are discarded
             self._c_decode_tokens.inc(emitted)
             if req.finish_reason is None:
+                if ds is not None:
+                    ds.generated += emitted
                 self.cache.seq_lens[slot] += a + 1
                 self._recycle_window(req)
 
     def _commit(self, req: Request, token: int, events: list[TokenEvent]) -> None:
+        """Authoritative commit of one harvested token: latency marks are
+        stamped HERE, at the stream boundary where the value becomes
+        available — never at dispatch time."""
         now = time.perf_counter()
         t = self.tracer
         if req.t_first_token is None:
@@ -813,6 +979,7 @@ class Server:
                 self.drafter.release_slot(slot)
             self.results[req.rid] = req
             self._slot_req.pop(slot, None)
+            self._disp.pop(req.rid, None)
             if t.enabled:
                 t.instant(PID_REQUESTS, req.rid, "finished",
                           finish_reason=req.finish_reason,

@@ -139,7 +139,7 @@ class ModelDrafter:
         _, commit_step = make_spec_verify_steps(
             model, page_size=page_size, engine=engine, backend=backend,
         )
-        _, _, decode_step = make_paged_serve_steps(
+        _, _, _, decode_step = make_paged_serve_steps(
             model, page_size=page_size, engine=engine, backend=backend,
         )
         self._catch_up = jax.jit(commit_step)

@@ -182,18 +182,24 @@ def make_serve_steps(model: Transformer, *, engine: Engine | None = None,
 def make_paged_serve_steps(model: Transformer, *, page_size: int,
                            engine: Engine | None = None,
                            backend: str | None = None):
-    """Slot-aware (prefill_full, prefill_chunk, decode_step) triple over the
-    serving StateStore — the fixed-shape steps the continuous-batching
-    scheduler drives (``repro.serving``) for EVERY decoder-only family:
-    attention layers page K/V, recurrent layers read/commit per-slot state
-    rows. ``prefill_full`` runs a whole right-padded prompt in one call
-    (attends over the fresh k/v only); ``prefill_chunk`` runs one chunk of
-    a longer prompt, additionally gathering earlier chunks' K/V back
-    through the page table. Each decode covers every slot at its own
-    length, committing only ``active`` rows.
+    """Slot-aware (prefill_full, prefill_chunk, prefill_batch, decode_step)
+    quadruple over the serving StateStore — the fixed-shape steps the
+    continuous-batching scheduler drives (``repro.serving``) for EVERY
+    decoder-only family: attention layers page K/V, recurrent layers
+    read/commit per-slot state rows. ``prefill_full`` runs a whole
+    right-padded prompt in one call (attends over the fresh k/v only);
+    ``prefill_chunk`` runs one chunk of a longer prompt, additionally
+    gathering earlier chunks' K/V back through the page table;
+    ``prefill_batch`` runs one chunk for each of P slots in a single step
+    (the multi-slot path — per-row math identical to P serial chunked
+    calls, inactive pad rows masked to the null page). Each decode covers
+    every slot at its own length, committing only ``active`` rows.
 
-    prefill_*(params, tokens (1, Tb), pools, page_row (P,), slot (),
-              start (), length ()) -> (logits (1, V), pools)
+    prefill_full/chunk(params, tokens (1, Tb), pools, page_row (P,),
+              slot (), start (), length ()) -> (logits (1, V), pools)
+    prefill_batch(params, tokens (P, Tb), pools, page_rows (P, Pps),
+              slots (P,), starts (P,), lengths (P,), active (P,))
+              -> (logits (P, V), pools)
     decode_step(params, tokens (S, 1), pools, page_table (S, P),
                 seq_lens (S,), active (S,)) -> (logits (S, V), pools)
     """
@@ -213,6 +219,14 @@ def make_paged_serve_steps(model: Transformer, *, page_size: int,
                 page_size=page_size, chunked=True, engine=eng,
             )
 
+    def prefill_batch(params, tokens, pools, page_rows, slots, starts,
+                      lengths, active):
+        with engine_scope(eng):
+            return model.prefill_cb(
+                params, tokens, pools, page_rows, slots, starts, lengths,
+                page_size=page_size, chunked=True, active=active, engine=eng,
+            )
+
     def decode_step(params, tokens, pools, page_table, seq_lens, active):
         with engine_scope(eng):
             return model.decode_cb(
@@ -220,7 +234,7 @@ def make_paged_serve_steps(model: Transformer, *, page_size: int,
                 page_size=page_size, engine=eng,
             )
 
-    return prefill_full, prefill_chunk, decode_step
+    return prefill_full, prefill_chunk, prefill_batch, decode_step
 
 
 def make_spec_verify_steps(model: Transformer, *, page_size: int,

@@ -253,10 +253,11 @@ def test_ambient_backend_context():
 def test_heuristic_blocks_clamp_to_problem():
     bm, bn, bk = tuning.heuristic_block_sizes(13, 21, 19, jnp.float32)
     assert bm <= 16 and bn == 128 and bk <= 24
-    bm, bn, bk = tuning.heuristic_block_sizes(512, 512, 512, jnp.float32)
+    # Training-size M (past the batched-prefill band's 512 ceiling).
+    bm, bn, bk = tuning.heuristic_block_sizes(1024, 512, 512, jnp.float32)
     assert (bm, bn, bk) == (128, 128, 128)
     # fp8 storage: 1 B/elem doubles the K tile at the same VMEM budget.
-    bm, bn, bk = tuning.heuristic_block_sizes(512, 512, 512, jnp.float8_e4m3fn)
+    bm, bn, bk = tuning.heuristic_block_sizes(1024, 512, 512, jnp.float8_e4m3fn)
     assert bk == 256
 
 
@@ -312,11 +313,49 @@ def test_chunk_prefill_blocks_round_m_to_chunk():
             assert bm <= 64 < 128
             assert bn % 128 == 0
             assert bk >= 256, (m, dt)  # spare VMEM goes into the K tile
-    # Above the chunk table, training tiles resume (problem-clamped).
+    # Above the chunk table, the batched-prefill band caps M at 128.
     assert tuning.heuristic_block_sizes(256, 4096, 4096, jnp.float32)[0] == 128
     # The autotune candidate list sweeps the chunk Ms.
     assert {(16, 128, 512), (32, 128, 256), (64, 128, 256)} <= set(
         tuning.AUTOTUNE_CANDIDATES
+    )
+
+
+def test_batched_prefill_blocks_between_chunk_and_training():
+    """Batched multi-slot prefill GEMMs (M = P x chunk, 64 < M <= 512) cap
+    the M tile at 128 (sublane-rounded below that) and take a K tile
+    between the chunk and training depths — a (4, 48)-row step must not
+    pad to a 128x2 grid nor fall into the training table's shallow K."""
+    for m in (65, 96, 128, 192, 256, 512):
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float8_e4m3fn):
+            bm, bn, bk = tuning.heuristic_block_sizes(m, 4096, 4096, dt)
+            sub = tuning.SUBLANE[jnp.dtype(dt).itemsize]
+            assert bm == min(-(-m // sub) * sub, 128), (m, dt)
+            assert bn % 128 == 0
+            _, _, bk_chunk = tuning.heuristic_block_sizes(64, 4096, 4096, dt)
+            _, _, bk_train = tuning.heuristic_block_sizes(1024, 4096, 4096, dt)
+            assert bk_train <= bk <= bk_chunk, (m, dt)
+    # Seam boundaries: 64 is still the chunk table, 65 enters the batched
+    # band, 512 is its ceiling (P=8 x chunk 64), 513 falls to training.
+    assert tuning.heuristic_block_sizes(64, 4096, 4096, jnp.float32)[0] == 64
+    assert tuning.heuristic_block_sizes(65, 4096, 4096, jnp.float32)[0] == 72
+    assert tuning.heuristic_block_sizes(512, 4096, 4096, jnp.float32)[2] == 192
+    assert tuning.heuristic_block_sizes(513, 4096, 4096, jnp.float32)[2] == 128
+    # The candidate list sweeps the batched band.
+    assert {(96, 128, 192), (128, 128, 192), (128, 128, 384),
+            (256, 128, 128)} <= set(tuning.AUTOTUNE_CANDIDATES)
+
+
+def test_batched_prefill_gemm_matches_ref(rng):
+    """A batched-prefill-sized (M=96 = 2 slots x 48-token chunk) GEMM
+    through the Pallas path with the auto-selected batched tile still
+    computes the right thing."""
+    x = jnp.asarray(rng.standard_normal((96, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 20)).astype(np.float32))
+    z = ops.gemm_op(x, w, None, gop=semiring.MATMUL, policy=FP32_REF,
+                    backend="pallas_interpret")
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(x) @ np.asarray(w), rtol=1e-4, atol=1e-4
     )
 
 

@@ -330,10 +330,14 @@ def test_server_trace_passes_validator_with_full_chains(served_model, tmp_path):
     finished = [e for e in events
                 if e["ph"] == "i" and e["name"] == "finished"]
     assert len(finished) == len(_LENS)
-    # Device track recorded both step kinds.
+    # Device "steps" track records dispatch spans for both step kinds; the
+    # "in flight" track records the matching dispatch->harvest X events.
     dev = {e["name"] for e in events
            if e["pid"] == PID_DEVICE and e["ph"] == "B"}
-    assert {"prefill_chunk", "decode"} <= dev
+    assert {"prefill_chunk.dispatch", "decode.dispatch"} <= dev
+    inflight = {e["name"] for e in events
+                if e["pid"] == PID_DEVICE and e["ph"] == "X"}
+    assert {"prefill_chunk.complete", "decode.complete"} <= inflight
 
 
 def test_metrics_ttft_percentiles_within_one_bucket(served_model):

@@ -400,7 +400,7 @@ def test_masked_prefill_state_matches_full_scan(arch):
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(3))
     page_size, chunk, n_slots = 4, 4, 2
-    _, prefill_chunk, _ = make_paged_serve_steps(model, page_size=page_size)
+    _, prefill_chunk, _, _ = make_paged_serve_steps(model, page_size=page_size)
     pools = model.init_state_store(n_slots, 16, page_size)
     page_rows = {0: jnp.asarray([1, 2, 3, 4, 0, 0], jnp.int32),
                  1: jnp.asarray([5, 6, 7, 8, 0, 0], jnp.int32)}
