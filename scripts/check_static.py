@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Wrapper for ``python -m repro.analysis`` that works without an
+installed package or PYTHONPATH (mirrors scripts/validate_trace.py):
+
+    python scripts/check_static.py [same flags as python -m repro.analysis]
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

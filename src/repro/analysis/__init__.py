@@ -1,0 +1,54 @@
+"""repro.analysis — repo-specific static contract checking.
+
+Three independent passes, one CLI (``python -m repro.analysis``):
+
+- :mod:`repro.analysis.rules` — AST lint rules (``RPR1xx``) distilled from
+  this repo's bug history: mutable defaults / shared import-time config
+  instances (PR 5), module-level mutable state in ``serving/`` (PR 5's
+  global rid counter), bare ``assert`` in library code (PR 5's
+  ``-O``-stripped double-finish), ``jnp.asarray`` over a live numpy mirror
+  without ``.copy()`` (PR 9's dispatch-ahead aliasing), and host syncs
+  inside registered hot paths.
+- :mod:`repro.analysis.contracts` — trace-time serving-step contracts:
+  every decoder-only zoo arch's prefill/decode/verify/batched-prefill
+  steps must trace at fixed shapes, preserve the pools pytree, contain a
+  ``pallas_call`` iff the engine backend is pallas, keep fp8 KV pools in
+  E4M3 storage with an fp32-accumulating policy, and stay within the
+  ``P_BUCKETS`` compiled-signature bound.
+- :mod:`repro.analysis.tiles` — static validation of every
+  ``kernels/tuning.py`` tile table (sublane/lane alignment, VMEM bounds,
+  band ordering) without running a kernel.
+
+Findings are suppressed per line with ``# repro: allow[RPRnnn] <reason>``;
+the reason is mandatory — an unexplained pragma is itself a finding.
+"""
+from repro.analysis.contracts import (
+    ContractViolation,
+    check_arch,
+    check_bucket_policy,
+    check_zoo,
+    jaxpr_has_pallas_call,
+)
+from repro.analysis.rules import (
+    Finding,
+    HOT_PATHS,
+    RULES,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.tiles import TileFinding, validate_tuning_tables
+
+__all__ = [
+    "ContractViolation",
+    "Finding",
+    "HOT_PATHS",
+    "RULES",
+    "TileFinding",
+    "check_arch",
+    "check_bucket_policy",
+    "check_zoo",
+    "jaxpr_has_pallas_call",
+    "lint_paths",
+    "lint_source",
+    "validate_tuning_tables",
+]

@@ -1,0 +1,100 @@
+"""``python -m repro.analysis`` — run every static pass over the repo.
+
+Exit status: 0 clean, 1 unsuppressed findings, 2 internal error. The CI
+``static-analysis`` job gates on this next to ruff; it needs no device
+(lint is pure AST, contracts are abstract traces, tiles are arithmetic).
+
+    python -m repro.analysis                  # lint src + tiles + contracts
+    python -m repro.analysis path/to/file.py  # lint specific paths only
+    python -m repro.analysis --no-contracts   # skip the (slower) zoo traces
+    python -m repro.analysis --archs granite-3-8b gemma2-2b
+    python -m repro.analysis --hbm-budget-mb 512   # + compiled decode audit
+    python -m repro.analysis --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import contracts, rules, tiles
+
+DEFAULT_LINT_PATHS = ("src/repro",)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static contract checker "
+                    "(lint + serving-step contracts + tuning-table tiles)",
+    )
+    parser.add_argument(
+        "paths", nargs="*",
+        help=f"files/dirs to lint (default: {', '.join(DEFAULT_LINT_PATHS)})",
+    )
+    parser.add_argument("--no-lint", action="store_true")
+    parser.add_argument("--no-contracts", action="store_true")
+    parser.add_argument("--no-tiles", action="store_true")
+    parser.add_argument(
+        "--archs", nargs="+", default=None,
+        help="zoo archs for the contract pass (default: every "
+             "decoder-only arch)",
+    )
+    parser.add_argument(
+        "--backends", nargs="+", default=("xla", "pallas_interpret"),
+        help="engine backends to trace contracts under",
+    )
+    parser.add_argument(
+        "--hbm-budget-mb", type=float, default=None,
+        help="optionally compile each arch's decode step and fail if its "
+             "fusion-aware HBM traffic exceeds this many MB "
+             "(roofline/hlo_cost model)",
+    )
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid, summary in sorted(rules.RULES.items()):
+            print(f"{rid}  {summary}")
+        return 0
+
+    failed = False
+
+    if not args.no_lint:
+        lint_paths = args.paths or list(DEFAULT_LINT_PATHS)
+        findings = rules.lint_paths(lint_paths)
+        for f in findings:
+            print(f)
+        n_files = sum(1 for _ in rules.iter_python_files(lint_paths))
+        print(f"lint: {len(findings)} finding(s) over {n_files} file(s)")
+        failed |= bool(findings)
+
+    if not args.no_tiles:
+        tfindings = tiles.validate_tuning_tables()
+        for f in tfindings:
+            print(f)
+        n_tables = len(tiles.discover_tables())
+        print(f"tiles: {len(tfindings)} finding(s) over {n_tables} table(s) "
+              "+ candidate sets + selection sweep")
+        failed |= bool(tfindings)
+
+    if not args.no_contracts:
+        budget = (
+            args.hbm_budget_mb * 1e6 if args.hbm_budget_mb is not None
+            else None
+        )
+        violations, checked = contracts.check_zoo(
+            backends=tuple(args.backends), archs=args.archs,
+            hbm_budget_bytes=budget,
+        )
+        for v in violations:
+            print(v)
+        print(f"contracts: {len(violations)} violation(s) over {checked} "
+              "(arch, backend/variant) cells "
+              f"x {len(contracts.STEP_KINDS)} step kinds")
+        failed |= bool(violations)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -127,7 +127,11 @@ def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> A
         meta = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     leaves, treedef = _flatten(like)
-    assert meta["n_leaves"] == len(leaves), "checkpoint/tree structure mismatch"
+    if meta["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint/tree structure mismatch: checkpoint has "
+            f"{meta['n_leaves']} leaves, target tree has {len(leaves)}"
+        )
     shard_leaves = (
         jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
         else [None] * len(leaves)
@@ -139,7 +143,11 @@ def restore(directory: str, step: int, like: Any, *, shardings: Any = None) -> A
         if dt in _NONNATIVE:
             arr = arr.view(jnp.dtype(dt))
         arr = arr.astype(ref.dtype) if str(ref.dtype) != dt else arr
-        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape, i)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {i} shape mismatch: checkpoint {tuple(arr.shape)} vs "
+                f"target {tuple(ref.shape)}"
+            )
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:

@@ -38,7 +38,11 @@ class SyntheticLM:
     """batch(i) -> dict of numpy arrays for host ``host_index``."""
 
     def __init__(self, cfg: DataConfig, model_cfg: ModelConfig | None = None):
-        assert cfg.global_batch % cfg.host_count == 0
+        if cfg.global_batch % cfg.host_count:
+            raise ValueError(
+                f"global_batch {cfg.global_batch} not divisible by "
+                f"host_count {cfg.host_count}"
+            )
         self.cfg = cfg
         self.model_cfg = model_cfg
         self.local_batch = cfg.global_batch // cfg.host_count

@@ -273,7 +273,11 @@ def flash_attention_pallas(
     sk = k.shape[1]
     bq = min(block_q, sq)
     bk = min(block_k, sk)
-    assert sq % bq == 0 and sk % bk == 0, ((sq, sk), (bq, bk))
+    if sq % bq or sk % bk:
+        raise ValueError(
+            f"sequence ({sq}, {sk}) not divisible by blocks ({bq}, {bk}); "
+            "pad the sequence and mask inside the kernel"
+        )
     nk = sk // bk
     grid = (bh, sq // bq, nk)
     scale = 1.0 / math.sqrt(d)

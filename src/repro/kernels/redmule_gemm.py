@@ -132,12 +132,15 @@ def redmule_gemm_pallas(
         x = x[None]
     b, m, k = x.shape
     k2, n = w.shape[-2:]
-    assert k == k2, (x.shape, w.shape)
-    assert w.ndim == 2 or w.shape[0] == b, (x.shape, w.shape)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
-        (m, n, k),
-        (block_m, block_n, block_k),
-    )
+    if k != k2:
+        raise ValueError(f"inner dims disagree: x {x.shape} @ w {w.shape}")
+    if w.ndim != 2 and w.shape[0] != b:
+        raise ValueError(f"batched w leading dim mismatch: x {x.shape} @ w {w.shape}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"problem ({m}, {n}, {k}) not divisible by tile "
+            f"({block_m}, {block_n}, {block_k}); pad or clamp the blocks first"
+        )
     nk = k // block_k
     grid = (b, m // block_m, n // block_n, nk)
     out_dtype = policy.out if out_dtype is None else out_dtype

@@ -28,8 +28,10 @@ def gemm_op_ref(
     backward: bool = False,
 ) -> jnp.ndarray:
     """Reference GEMM-Op. x: (M, K), w: (K, N), y: (M, N) or None."""
-    assert x.ndim == 2 and w.ndim == 2, (x.shape, w.shape)
-    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got x {x.shape}, w {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"inner dims disagree: x {x.shape} @ w {w.shape}")
 
     cast_in = policy.cast_in_bwd if backward else policy.cast_in_fwd
     xc = cast_in(x)  # compute dtype: the CE datapath format

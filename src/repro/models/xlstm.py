@@ -90,7 +90,8 @@ def mlstm_apply(params, x, cfg: XLSTMConfig, engine: Engine, *,
         log_f = jnp.where(valid, log_f, 0.0)
 
     c = min(_CHUNK, s)
-    assert s % c == 0, (s, c)
+    if s % c:
+        raise ValueError(f"sequence length {s} not divisible by chunk {c}")
     n_chunks = s // c
 
     def reshape_chunks(t):

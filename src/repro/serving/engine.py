@@ -287,6 +287,7 @@ class EngineCore:
         p, chunk = tokens.shape
         bucket = p * chunk  # effective GEMM M — the tuning band's key
         t = self.tracer
+        # repro: allow[RPR106] active is a host numpy array — no device sync
         targs = {"rows": int(active.sum()), "P": p, "chunk": chunk,
                  "bucket": bucket}
         if rids is not None:
@@ -319,6 +320,7 @@ class EngineCore:
         back into it for the next decode."""
         n = self.cache.num_slots
         t = self.tracer
+        # repro: allow[RPR106] active is a host numpy array — no device sync
         targs = {"slots": n, "decoding": int(active.sum())}
         if t.enabled:
             t.begin(PID_DEVICE, DEVICE_TID, "decode.dispatch", **targs)

@@ -894,7 +894,9 @@ class Server:
                     req, int(self.cache.seq_lens[slot]) + int(lengths[slot]))
                 self._mirror_pages(req, grown)
         sp = stack_params(params_list)
+        # repro: allow[RPR105] spec round is host-synchronous; no mirror write before commit reads it
         seq_lens_dev = jnp.asarray(self.cache.seq_lens)
+        # repro: allow[RPR105] spec round is host-synchronous; no mirror write before commit reads it
         page_table_dev = jnp.asarray(self.cache.page_table)
         active_dev = jnp.asarray(active)
         if t.enabled:

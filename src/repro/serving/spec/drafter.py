@@ -193,6 +193,7 @@ class ModelDrafter:
                     # Draft-time writes land at base .. base+k-2.
                     self._ensure_pages(slot, int(base[slot]) + k - 1)
         sp = stack_params(params_list)
+        # repro: allow[RPR105] draft loop is host-synchronous; table is stable until verify commits
         page_table = jnp.asarray(store.page_table)
         active = jnp.asarray(drafting)
         tokens = np.zeros((n_slots, k), np.int32)
@@ -249,6 +250,7 @@ class ModelDrafter:
                 break
             logits, pools = self._catch_up(
                 self.params, jnp.asarray(toks), store.pools,
+                # repro: allow[RPR105] catch-up loop is host-synchronous; mirrors stable until it returns
                 jnp.asarray(store.page_table), jnp.asarray(store.seq_lens),
                 jnp.asarray(lengths), jnp.asarray(act),
             )
